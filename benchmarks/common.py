@@ -1,0 +1,54 @@
+"""Shared harness utilities for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def ensure_out() -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR
+
+
+def save_json(name: str, payload) -> str:
+    path = os.path.join(ensure_out(), name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def rounds_to_gap(losses, f_star, target: float) -> int:
+    """First round index whose optimality gap <= target (or -1)."""
+    gaps = jnp.asarray(losses) - f_star
+    hit = jnp.nonzero(gaps <= target, size=1, fill_value=-1)[0][0]
+    return int(hit)
+
+
+def bits_to_gap(losses, bits_per_round, f_star, target: float) -> int:
+    """Cumulative uplink bits per client when the gap first reaches target."""
+    idx = rounds_to_gap(losses, f_star, target)
+    if idx < 0:
+        return -1
+    return int(jnp.cumsum(jnp.asarray(bits_per_round))[idx])
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6  # microseconds
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    """CSV line per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,124 @@
+"""Kernel micro-benchmarks + allclose gates.
+
+CPU caveat: Pallas TPU kernels execute under interpret=True here, so the
+µs numbers measure the *oracle-equivalent computation*, not TPU silicon; the
+derived column carries the allclose verdict (the correctness gate) and the
+analytic per-call FLOP/byte counts used by the roofline model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.kernels.client_solve import ops as cs_ops
+from repro.kernels.client_solve.ref import client_solve_ref
+from repro.kernels.stoch_quant.ref import stoch_quant_ref
+from repro.kernels.stoch_quant.stoch_quant import stoch_quant
+from repro.kernels.swa_attention import ops as swa_ops
+from repro.kernels.swa_attention.ref import swa_attention_ref
+
+
+def bench_swa():
+    out = {}
+    for S, window in [(512, 128), (1024, 256)]:
+        B, H, Hkv, Dh = 2, 4, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+        got, us = timed(
+            lambda: swa_ops.swa_attention(q, k, v, window=window, q_blk=128), iters=3
+        )
+        q2 = q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+        k2 = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+        v2 = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+        ref = swa_attention_ref(q2, k2, v2, window=window, groups=2)
+        ref = ref.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        flops = 4 * B * H * S * (window + 128) * Dh  # qk + pv over the band
+        emit(f"kernel/swa/S{S}_w{window}", us,
+             f"allclose={'PASS' if err < 1e-4 else 'FAIL'};maxerr={err:.1e};flops={flops:.2e}")
+        out[f"S{S}_w{window}"] = {"us": us, "max_err": err, "flops": flops}
+    return out
+
+
+def bench_client_solve():
+    out = {}
+    for d in (99, 263):
+        n = 8
+        kA, kb = jax.random.split(jax.random.PRNGKey(d))
+        Q = jnp.linalg.qr(jax.random.normal(kA, (n, d, d)))[0]
+        eigs = jnp.logspace(0, 1.5, d)[None]
+        A = jnp.einsum("nij,nj,nkj->nik", Q, jnp.broadcast_to(eigs, (n, d)), Q)
+        b = jax.random.normal(kb, (n, d), jnp.float32)
+        got, us = timed(lambda: cs_ops.client_solve(A, b, damping=1.0, iters=64), iters=3)
+        ref = client_solve_ref(A, b, damping=1.0)
+        err = float(jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref)))
+        dp = -(-d // 128) * 128
+        flops = n * 64 * 2 * dp * dp  # CG iters x matvec
+        emit(f"kernel/client_solve/d{d}", us,
+             f"allclose={'PASS' if err < 1e-3 else 'FAIL'};relerr={err:.1e};flops={flops:.2e}")
+        out[f"d{d}"] = {"us": us, "rel_err": err, "flops": flops}
+    return out
+
+
+def bench_stoch_quant():
+    out = {}
+    for N in (1 << 14, 1 << 18):
+        ky, ku = jax.random.split(jax.random.PRNGKey(N))
+        y = jax.random.normal(ky, (N,), jnp.float32)
+        prev = jnp.zeros((N,), jnp.float32)
+        u = jax.random.uniform(ku, (N,), jnp.float32)
+        R = jnp.max(jnp.abs(y))
+        (qk, yk), us = timed(
+            lambda: stoch_quant(y, prev, u, R, bits=3, interpret=True), iters=3
+        )
+        qr, yr = stoch_quant_ref(y, prev, u, R, bits=3)
+        exact = bool(jnp.all(qk == qr))
+        emit(f"kernel/stoch_quant/N{N}", us,
+             f"bitexact={'PASS' if exact else 'FAIL'};bytes={N*12:.2e}")
+        out[f"N{N}"] = {"us": us, "bit_exact": exact}
+    return out
+
+
+def bench_slstm():
+    from repro.kernels.slstm_scan import slstm_scan, slstm_scan_ref
+
+    out = {}
+    for S in (256, 1024):
+        B, D, H = 4, 128, 4
+        w = D // H
+        ks = jax.random.split(jax.random.PRNGKey(S), 2)
+        x4 = jax.random.normal(ks[0], (B, S, 4 * D), jnp.float32)
+        r = jax.random.normal(ks[1], (H, w, 4 * w), jnp.float32) * 0.3
+        bias = jnp.zeros((4 * D,), jnp.float32)
+        state = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+        (hs, _), us = timed(
+            lambda: slstm_scan(x4, r, bias, state, t_blk=256, interpret=True),
+            iters=2,
+        )
+        hs_r, _ = slstm_scan_ref(x4, r, bias, state)
+        err = float(jnp.max(jnp.abs(hs - hs_r)))
+        flops = 2 * B * S * H * w * 4 * w  # per-step recurrent matmul
+        emit(f"kernel/slstm_scan/S{S}", us,
+             f"allclose={'PASS' if err < 1e-4 else 'FAIL'};maxerr={err:.1e};flops={flops:.2e}")
+        out[f"S{S}"] = {"us": us, "max_err": err, "flops": flops}
+    return out
+
+
+def main():
+    results = {
+        "swa_attention": bench_swa(),
+        "client_solve": bench_client_solve(),
+        "stoch_quant": bench_stoch_quant(),
+        "slstm_scan": bench_slstm(),
+    }
+    save_json("kernel_bench.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (+ kernels + privacy). Each emits
+``name,us_per_call,derived`` CSV lines and writes a JSON artifact under
+benchmarks/out/. ``--only <name>`` runs a single suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+SUITES = ("bits_table", "paper_fig1", "paper_fig2", "bits_ablation", "privacy_demo", "kernel_bench")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SUITES, default=None)
+    args = ap.parse_args()
+
+    # the paper-repro suites run in f64 like the paper's CPU experiments
+    jax.config.update("jax_enable_x64", True)
+
+    suites = [args.only] if args.only else list(SUITES)
+    failures = []
+    for name in suites:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    if failures:
+        for name, err in failures:
+            print(f"FAILED suite {name}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all suites passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Privacy demo (paper Sec. 4 / Theorem 2): an honest-but-curious PS that
+observes everything on the wire cannot reconstruct a client's gradient.
+
+Two adversaries are simulated against the same FedNew run:
+  1. equation-counting: per round the PS sees ONE d-vector per client but
+     needs (H_i, g_i, lam_i) — unknowns exceed equations at every k.
+  2. least-squares reconstruction, GIFTED the oracle-optimal scalar Hessian
+     guess (strictly stronger than any real eavesdropper): the recovered
+     gradients still miss by O(1) relative error.
+Contrast: FedGD broadcasts g_i verbatim (reconstruction error exactly 0).
+
+    PYTHONPATH=src python examples/privacy_attack.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fednew
+from repro.core.objectives import logistic_regression
+from repro.core.privacy import reconstruction_attack, unknown_equation_count
+from repro.data.synthetic import PAPER_DATASETS, make_dataset
+
+ROUNDS = 15
+
+
+def main() -> None:
+    data = make_dataset(PAPER_DATASETS["a1a"], jax.random.PRNGKey(1))
+    obj = logistic_regression(mu=1e-3)
+    cfg = fednew.FedNewConfig(rho=0.1, alpha=0.05, hessian_period=1)
+    d = data.dim
+
+    ledger = unknown_equation_count(d, ROUNDS, hessian_period=1)
+    print("Theorem 2 equation-counting ledger "
+          f"(d={d}, K={ROUNDS} observed rounds):")
+    print(f"  equations: {ledger.equations}   unknowns: {ledger.unknowns}")
+    print(f"  underdetermined: {ledger.underdetermined}\n")
+
+    # transcript the PS actually sees: y_i (client 0) and the global y
+    state = fednew.init(obj, data, cfg, jax.random.PRNGKey(2))
+    ys_i, ys, gs = [], [], []
+    for _ in range(ROUNDS):
+        gs.append(obj.local_grad(state.x, data)[0])
+        prev_lam = state.lam
+        state, _ = fednew.step(state, obj, data, cfg)
+        ys_i.append((state.lam[0] - prev_lam[0]) / cfg.rho + state.y)
+        ys.append(state.y)
+
+    _, rel_err = reconstruction_attack(
+        jnp.stack(ys_i), jnp.stack(ys), jnp.stack(gs), cfg.rho, cfg.damping
+    )
+    print("Oracle-assisted reconstruction attack on the FedNew transcript:")
+    print(f"  relative L2 error of recovered gradients: {float(rel_err):.3f}")
+    assert float(rel_err) > 0.3, "attack should fail"
+    print("  -> attack FAILS (error O(1)); under FedGD the same PS reads g_i "
+          "off the wire with error exactly 0.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the paper in 60 seconds (CPU).
+
+Reproduces the core claim on a w8a-shaped synthetic dataset: FedNew reaches
+Newton-grade optimality gaps at first-order O(d) uplink cost, without ever
+transmitting a gradient or a Hessian; Q-FedNew does it in ~10x fewer bits.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, fednew
+from repro.core.objectives import logistic_regression
+from repro.data.synthetic import PAPER_DATASETS, make_dataset
+
+ROUNDS = 60
+
+
+def gap_curve(losses, f_star):
+    return [max(float(l - f_star), 1e-16) for l in losses]
+
+
+def main() -> None:
+    data = make_dataset(PAPER_DATASETS["w8a"], jax.random.PRNGKey(0))
+    obj = logistic_regression(mu=1e-3)
+    _, f_star = baselines.reference_optimum(obj, data, iters=30)
+    print(f"dataset w8a-shaped: n=60 clients, m=829, d=267;  f* = {float(f_star):.6f}\n")
+
+    runs = {}
+    _, m = baselines.run_simple(baselines.fedgd_init, baselines.fedgd_step,
+                                obj, data, baselines.FedGDConfig(lr=2.0), ROUNDS)
+    runs["FedGD"] = m
+    _, m = baselines.run_simple(baselines.newton_zero_init, baselines.newton_zero_step,
+                                obj, data, baselines.NewtonZeroConfig(), ROUNDS)
+    runs["Newton-Zero"] = m
+    for label, cfg in {
+        "FedNew(r=1)": fednew.FedNewConfig(rho=0.1, alpha=0.1, hessian_period=1),
+        "FedNew(r=0)": fednew.FedNewConfig(rho=0.1, alpha=0.1, hessian_period=0),
+        "Q-FedNew(3b)": fednew.FedNewConfig(rho=0.1, alpha=0.1, hessian_period=1, bits=3),
+    }.items():
+        _, m = fednew.run(obj, data, cfg, ROUNDS)
+        runs[label] = m
+
+    print(f"{'method':14s} {'gap@10':>10s} {'gap@30':>10s} {'gap@'+str(ROUNDS):>10s} {'MB uplink/client':>17s}")
+    for label, m in runs.items():
+        g = gap_curve(m.loss, f_star)
+        mb = float(jnp.sum(m.uplink_bits_per_client.astype(jnp.float64))) / 8e6
+        print(f"{label:14s} {g[9]:10.2e} {g[29]:10.2e} {g[-1]:10.2e} {mb:17.3f}")
+
+    print("\nNote: FedNew/Q-FedNew transmit only y_i (never g_i or H_i);")
+    print("Newton-Zero's first round alone uploads 32*d^2 bits = "
+          f"{32 * data.dim ** 2 / 8e6:.2f} MB per client.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Splice the generated dry-run/roofline tables into EXPERIMENTS.md at the
+<!-- DRYRUN_* --> / <!-- ROOFLINE_* --> markers.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+
+import io
+import os
+import re
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import report  # noqa: E402
+
+MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def render(mesh: str, section: str) -> str:
+    cache = report.load(mesh)
+    if section == "dryrun":
+        return f"### Dry-run — {mesh}\n\n" + report.dryrun_table(cache)
+    return f"### Roofline — {mesh}\n\n" + report.roofline_table(cache)
+
+
+def splice(text: str, marker: str, payload: str) -> str:
+    block = f"<!-- {marker} -->\n{payload}\n<!-- /{marker} -->"
+    if f"<!-- /{marker} -->" in text:
+        return re.sub(
+            rf"<!-- {marker} -->.*?<!-- /{marker} -->", lambda _: block, text,
+            flags=re.S,
+        )
+    return text.replace(f"<!-- {marker} -->", block)
+
+
+def main() -> None:
+    with open(MD) as f:
+        text = f.read()
+    text = splice(text, "DRYRUN_SINGLEPOD", render("singlepod", "dryrun"))
+    text = splice(text, "ROOFLINE_SINGLEPOD", render("singlepod", "roofline"))
+    try:
+        text = splice(text, "DRYRUN_MULTIPOD", render("multipod", "dryrun"))
+    except FileNotFoundError:
+        print("multipod JSON not ready; skipped")
+    with open(MD, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Config system: model architecture + input shapes + federation topology.
+
+Every assigned architecture is a ``ModelConfig`` constructed in its own
+``repro/configs/<arch>.py`` (source cited there). Layer stacking is described
+by ``layer_pattern`` — a short tuple of block kinds that repeats to
+``n_layers`` (e.g. gemma3's 5 local : 1 global). The transformer composer
+scans over pattern repeats with stacked params, so HLO size is O(|pattern|),
+not O(n_layers).
+
+Block kinds:
+  'global'  full causal self-attention
+  'local'   sliding-window causal self-attention (cfg.window)
+  'rglru'   RG-LRU recurrent block (recurrentgemma)
+  'mlstm'   xLSTM matrix-memory block
+  'slstm'   xLSTM scalar-memory block
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """FedNew-HF federation topology + hyperparameters (paper Alg. 1)."""
+
+    rho: float = 0.1
+    alpha: float = 0.5
+    cg_iters: int = 8
+    hessian_at_init: bool = False  # r=0 variant: anchor HVPs at stored x^0
+    use_gauss_newton: bool = True  # PSD GGN (restores the paper's convexity)
+    bits: Optional[int] = None  # Q-FedNew-HF: stochastic-quantize y_i uplinks
+    state_dtype: str = "float32"  # lam/y/CG workspace dtype (bf16 for >=27B)
+    # Mesh axes that enumerate FL clients. Remaining axes form each client's
+    # private mesh. Large models need big clients (per-client dual state is
+    # model-sized) — see DESIGN.md §5.
+    client_axes: Tuple[str, ...] = ("data",)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    layer_pattern: Tuple[str, ...] = ("global",)
+    window: int = 0  # sliding-window size for 'local' blocks
+    # --- attention / logits flavor ---
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 10_000.0  # gemma3 uses a different local theta
+    embed_scale: bool = True  # multiply embeddings by sqrt(d_model) (gemma)
+    mlp_act: str = "silu"  # silu (llama) | gelu (gemma geglu, whisper)
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- recurrent (RG-LRU) ---
+    lru_width: int = 0  # 0 => d_model
+    conv1d_width: int = 4
+    # --- xLSTM ---
+    mlstm_proj_factor: float = 2.0
+    slstm_ffn_factor: float = 1.34
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # precomputed frame-embedding length (stub frontend)
+    # --- VLM (internvl) ---
+    vit_embed_dim: int = 0  # patch-embedding dim out of the stubbed ViT
+    n_patches: int = 0
+    # --- numerics / lowering ---
+    norm_eps: float = 1e-6
+    param_dtype: str = "float32"
+    activation_dtype: str = "bfloat16"
+    remat: bool = True
+    use_pallas: bool = False  # Pallas TPU kernels (tests run interpret=True)
+    loss_chunk: int = 512  # sequence chunk for the never-materialize-logits CE
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    moe_seq_chunk: int = 2048
+    # --- source citation ---
+    source: str = ""
+    fed: FedConfig = dataclasses.field(default_factory=FedConfig)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_repeats(self) -> int:
+        """Full repeats scanned with stacked params; remainder layers (the
+        'tail', e.g. gemma3-4b's 34 = 5x6 + 4) are applied unrolled."""
+        return self.n_layers // len(self.layer_pattern)
+
+    @property
+    def tail_len(self) -> int:
+        return self.n_layers % len(self.layer_pattern)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256) -> "ModelConfig":
+        """Smoke-test variant: same family, laptop-sized (spec: <=2 layers,
+        d_model<=512, <=4 experts)."""
+        pat = self.layer_pattern[: max(1, n_layers)]
+        n_layers = len(pat) * max(1, n_layers // len(pat)) if n_layers >= len(pat) else len(pat)
+        heads = max(2, min(self.n_heads, 4))
+        kv = max(1, min(self.n_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            layer_pattern=pat,
+            d_model=d_model,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=d_model // heads,
+            d_ff=2 * d_model if self.d_ff else 0,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            lru_width=min(self.lru_width, d_model) if self.lru_width else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 16) if self.encoder_seq else 0,
+            vit_embed_dim=min(self.vit_embed_dim, 64) if self.vit_embed_dim else 0,
+            n_patches=min(self.n_patches, 8) if self.n_patches else 0,
+            window=min(self.window, 16) if self.window else 0,
+            loss_chunk=16,
+            attn_q_chunk=32,
+            attn_kv_chunk=32,
+            moe_seq_chunk=32,
+            param_dtype="float32",
+            activation_dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,24 @@
+"""dbrx-132b [moe]: 40L d6144 48H (GQA kv=8) ff10752/expert vocab 100352,
+16 experts top-4 (fine-grained). [hf:databricks/dbrx-base]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    arch_type="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab_size=100352,
+    layer_pattern=("global",),
+    rope_theta=500_000.0,
+    embed_scale=False,
+    n_experts=16,
+    experts_per_token=4,
+    source="hf:databricks/dbrx-base",
+    # 132B params: the whole mesh is ONE client (per-client dual state is
+    # model-sized); multi-pod runs 2 clients, one per pod.
+    fed=FedConfig(client_axes=("pod",), state_dtype="bfloat16"),
+)

@@ -1,0 +1,22 @@
+"""gemma2-27b [dense]: 46L d4608 32H (GQA kv=16) ff36864 vocab 256000.
+Alternating local(4096)/global, attn+final logit softcaps. [arXiv:2408.00118]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    arch_type="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    layer_pattern=("local", "global"),  # 46 = 2*23
+    window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    mlp_act="gelu",
+    source="arXiv:2408.00118",
+    fed=FedConfig(client_axes=("pod",), state_dtype="bfloat16"),  # 27B: a client needs a full pod
+)

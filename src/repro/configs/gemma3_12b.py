@@ -1,0 +1,23 @@
+"""gemma3-12b [dense]: 48L d3840 16H (GQA kv=8) ff15360 vocab 262144.
+5:1 local(1024):global. [hf:google/gemma-3-1b-pt family]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    arch_type="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    layer_pattern=("local",) * 5 + ("global",),  # 48 = 6*8
+    window=1024,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    rope_theta_local=10_000.0,
+    mlp_act="gelu",
+    source="hf:google/gemma-3-1b-pt (scaled per assignment)",
+    fed=FedConfig(client_axes=("pod",), state_dtype="bfloat16"),  # 12B: pod-sized clients
+)

@@ -1,0 +1,23 @@
+"""internvl2-2b [vlm]: 24L d2048 16H (GQA kv=8) ff8192 vocab 92553.
+InternViT STUBBED (precomputed patch embeds) + InternLM2 decoder.
+[arXiv:2404.16821]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    arch_type="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    layer_pattern=("global",),
+    rope_theta=1_000_000.0,
+    embed_scale=False,
+    vit_embed_dim=1024,  # InternViT-300M output dim (stub frontend)
+    n_patches=256,
+    source="arXiv:2404.16821",
+    fed=FedConfig(client_axes=("data",)),
+)

@@ -1,0 +1,24 @@
+"""mixtral-8x7b [moe]: 32L d4096 32H (GQA kv=8) ff14336/expert vocab 32000,
+8 experts top-2, sliding-window attention. [arXiv:2401.04088]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    arch_type="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    layer_pattern=("local",),  # SWA on every layer
+    window=4096,
+    rope_theta=1_000_000.0,
+    embed_scale=False,
+    tie_embeddings=False,
+    n_experts=8,
+    experts_per_token=2,
+    source="arXiv:2401.04088",
+    fed=FedConfig(client_axes=("pod",), state_dtype="bfloat16"),  # 47B total params
+)

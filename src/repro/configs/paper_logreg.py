@@ -1,0 +1,17 @@
+"""The paper's own workload: regularized logistic regression (eq. 31) on
+LibSVM-geometry datasets. Not a transformer; used by the faithful-repro
+benchmarks and examples."""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-logreg",
+    arch_type="logreg",
+    n_layers=0,
+    d_model=267,  # w8a dimensionality
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=0,
+    source="FedNew (ICML 2022), Table 1",
+    fed=FedConfig(rho=0.1, alpha=0.03, client_axes=("data",)),
+)

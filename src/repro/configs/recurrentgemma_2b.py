@@ -1,0 +1,21 @@
+"""recurrentgemma-2b [hybrid]: 26L d2560 10H (GQA kv=1) ff7680 vocab 256000.
+RG-LRU + local attention, 2 recurrent : 1 attention. [arXiv:2402.19427]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    arch_type="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    layer_pattern=("rglru", "rglru", "local"),  # 26 = 3*8 + 2-layer tail
+    window=2048,
+    mlp_act="gelu",
+    lru_width=2560,
+    source="arXiv:2402.19427",
+    fed=FedConfig(client_axes=("data",)),
+)

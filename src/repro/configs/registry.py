@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = (
+    "gemma3-4b",
+    "gemma2-27b",
+    "xlstm-350m",
+    "gemma3-12b",
+    "internvl2-2b",
+    "dbrx-132b",
+    "whisper-medium",
+    "yi-6b",
+    "mixtral-8x7b",
+    "recurrentgemma-2b",
+    "paper-logreg",
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def model_archs() -> tuple:
+    return tuple(a for a in ARCH_IDS if a != "paper-logreg")
+
+
+# long_500k applicability (DESIGN.md: sub-quadratic gate)
+LONG_CONTEXT_OK = {
+    "gemma3-4b": True,
+    "gemma3-12b": True,
+    "gemma2-27b": True,
+    "mixtral-8x7b": True,
+    "xlstm-350m": True,
+    "recurrentgemma-2b": True,
+    "yi-6b": False,  # pure full attention
+    "dbrx-132b": False,  # pure full attention
+    "internvl2-2b": False,  # pure full attention
+    "whisper-medium": False,  # decoder spec'd to <=448 positions
+}

@@ -1,0 +1,23 @@
+"""whisper-medium [audio]: 24+24L enc-dec d1024 16H ff4096 vocab 51865.
+Mel-spectrogram + conv frontend STUBBED: input_specs feeds (B, 1500, d)
+frame embeddings. [arXiv:2212.04356]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    layer_pattern=("global",),
+    mlp_act="gelu",
+    embed_scale=False,
+    encoder_layers=24,
+    encoder_seq=1500,
+    source="arXiv:2212.04356",
+    fed=FedConfig(client_axes=("data",)),
+)

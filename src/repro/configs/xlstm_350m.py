@@ -1,0 +1,18 @@
+"""xlstm-350m [ssm]: 24L d1024 4H vocab 50304, sLSTM + mLSTM blocks
+(1 sLSTM per 8 blocks, paper's sparing placement). [arXiv:2405.04517]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    arch_type="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,  # mLSTM blocks carry their own up/down projections
+    vocab_size=50304,
+    layer_pattern=("mlstm",) * 7 + ("slstm",),  # 24 = 3*8
+    embed_scale=False,
+    source="arXiv:2405.04517",
+    fed=FedConfig(client_axes=("data",)),
+)

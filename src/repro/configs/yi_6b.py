@@ -1,0 +1,21 @@
+"""yi-6b [dense]: 32L d4096 32H (GQA kv=4) ff11008 vocab 64000.
+llama-architecture GQA, full attention. [arXiv:2403.04652]"""
+from repro.configs.base import FedConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    layer_pattern=("global",),
+    rope_theta=5_000_000.0,
+    embed_scale=False,
+    tie_embeddings=False,
+    source="arXiv:2403.04652",
+    fed=FedConfig(client_axes=("data",)),
+)

@@ -1,0 +1,138 @@
+"""Baselines the paper compares against (Sec. 6): FedGD, Newton-Zero, Newton.
+
+* FedGD (McMahan et al., 2017): distributed gradient descent, eq. 2.
+  Uplink: 32 d bits/round (the gradient, in the clear — no privacy).
+* Newton-Zero (Safaryan et al., 2021): clients upload their FULL local Hessian
+  once at k=0 (32 d^2 bits!) plus gradients every round; the PS factorizes
+  H^0 = mean_i H_i(x^0) once and applies x <- x - (H^0)^{-1} g^k.
+* Exact Newton (eq. 3): uploads Hessian AND gradient every round; used to
+  produce the reference optimum f(x*) (the paper uses its 30th iterate).
+
+All three share the communication-accounting conventions of
+``repro.core.fednew`` so benchmark curves are directly comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro.core.objectives import ClientDataset, Objective
+
+
+class SimpleState(NamedTuple):
+    x: jax.Array
+    aux: jax.Array  # method-specific (e.g. cached PS-side Cholesky factor)
+    step: jax.Array
+
+
+class SimpleMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    uplink_bits_per_client: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# FedGD
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FedGDConfig:
+    lr: float = 1.0
+
+
+def fedgd_init(obj, data: ClientDataset, cfg, x0=None) -> SimpleState:
+    d = data.dim
+    x = jnp.zeros((d,), data.features.dtype) if x0 is None else jnp.asarray(x0)
+    return SimpleState(x=x, aux=jnp.zeros(()), step=jnp.zeros((), jnp.int32))
+
+
+def fedgd_step(state: SimpleState, obj: Objective, data, cfg: FedGDConfig):
+    g = obj.global_grad(state.x, data)
+    x = state.x - cfg.lr * g
+    m = SimpleMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=jnp.asarray(32 * data.dim, jnp.int32),
+    )
+    return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
+
+
+# ---------------------------------------------------------------------------
+# Newton-Zero
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NewtonZeroConfig:
+    pass
+
+
+def newton_zero_init(obj: Objective, data, cfg, x0=None) -> SimpleState:
+    d = data.dim
+    x = jnp.zeros((d,), data.features.dtype) if x0 is None else jnp.asarray(x0)
+    H0 = obj.global_hessian(x, data)  # requires the d^2-bit first-round upload
+    L = jsl.cholesky(H0, lower=True)
+    return SimpleState(x=x, aux=L, step=jnp.zeros((), jnp.int32))
+
+
+def newton_zero_step(state: SimpleState, obj: Objective, data, cfg):
+    g = obj.global_grad(state.x, data)
+    x = state.x - jsl.cho_solve((state.aux, True), g)
+    d = data.dim
+    # k=0 pays the full-Hessian upload on top of the gradient.
+    bits = jnp.where(state.step == 0, 32 * d * d + 32 * d, 32 * d)
+    m = SimpleMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=bits.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32),
+    )
+    return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
+
+
+# ---------------------------------------------------------------------------
+# Exact Newton (reference; also produces f(x*))
+# ---------------------------------------------------------------------------
+
+
+def newton_init(obj, data, cfg=None, x0=None) -> SimpleState:
+    d = data.dim
+    x = jnp.zeros((d,), data.features.dtype) if x0 is None else jnp.asarray(x0)
+    return SimpleState(x=x, aux=jnp.zeros(()), step=jnp.zeros((), jnp.int32))
+
+
+def newton_step(state: SimpleState, obj: Objective, data, cfg=None):
+    g = obj.global_grad(state.x, data)
+    H = obj.global_hessian(state.x, data)
+    x = state.x - jnp.linalg.solve(H, g)
+    d = data.dim
+    m = SimpleMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=jnp.asarray(32 * d * d + 32 * d, jnp.int32),
+    )
+    return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
+
+
+def reference_optimum(obj: Objective, data: ClientDataset, iters: int = 30):
+    """f(x*) as the paper defines it: the 30th iterate of exact Newton."""
+    state = newton_init(obj, data)
+    step_fn = jax.jit(lambda s: newton_step(s, obj, data)[0])
+    for _ in range(iters):
+        state = step_fn(state)
+    return state.x, obj.global_loss(state.x, data)
+
+
+def run_simple(init_fn, step_fn, obj, data, cfg, rounds: int, x0=None):
+    state = init_fn(obj, data, cfg, x0)
+    jstep = jax.jit(lambda s: step_fn(s, obj, data, cfg))
+    history = []
+    for _ in range(rounds):
+        state, m = jstep(state)
+        history.append(m)
+    return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)

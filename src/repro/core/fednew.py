@@ -1,0 +1,171 @@
+"""FedNew and Q-FedNew (paper Algorithm 1 + Sec. 5), faithful implementation.
+
+State layout mirrors Algorithm 1:
+  x      (d,)      global model at the PS (broadcast each round)
+  y      (d,)      previous global direction y^{k-1}
+  lam    (n, d)    per-client dual variables
+  chol   (n, d, d) cached Cholesky factors of (H_i + (alpha+rho) I)
+  y_hat  (n, d)    per-client previously-quantized vectors (Q-FedNew only)
+
+The Hessian refresh rate r from the experiments maps to ``hessian_period``:
+r=1 -> 1, r=0.1 -> 10, r=0 -> 0 (never refresh; factor from x^0 is kept —
+the computation-efficient "zeroth Hessian" variant, one factorization ever).
+
+Communication accounting follows the paper: the metric of record is uplink
+bits per client per round — 32 d for FedNew, ``bits``·d + 32 for Q-FedNew.
+FedNew never transmits Hessians, so refresh rounds cost no extra bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro.core import admm
+from repro.core.objectives import ClientDataset, Objective
+from repro.core.quantization import exact_payload_bits, quantize_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class FedNewConfig:
+    rho: float = 1.0
+    alpha: float = 1.0
+    hessian_period: int = 1  # 0 => never refresh (r = 0)
+    bits: Optional[int] = None  # None => FedNew; int => Q-FedNew
+    use_kernel: bool = False  # route eq. 9 through the Pallas client_solve op
+
+    @property
+    def damping(self) -> float:
+        return self.alpha + self.rho
+
+
+class FedNewState(NamedTuple):
+    x: jax.Array
+    y: jax.Array
+    lam: jax.Array
+    chol: jax.Array
+    y_hat: jax.Array
+    key: jax.Array
+    step: jax.Array
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    uplink_bits_per_client: jax.Array
+    dual_sum_residual: jax.Array
+    direction_norm: jax.Array
+
+
+def _factorize(obj: Objective, x, data, cfg: FedNewConfig):
+    H = obj.local_hessian(x, data)  # (n, d, d)
+    if cfg.use_kernel:
+        # Pallas path keeps the raw Hessian; the in-VMEM CG kernel applies
+        # the (alpha+rho) damping itself (no host-side factorization at all).
+        return H
+    damped = H + cfg.damping * jnp.eye(H.shape[-1], dtype=H.dtype)
+    return jax.vmap(lambda M: jsl.cholesky(M, lower=True))(damped)
+
+
+def init(
+    obj: Objective, data: ClientDataset, cfg: FedNewConfig, key: jax.Array, x0=None
+) -> FedNewState:
+    d = data.dim
+    n = data.n_clients
+    dtype = data.features.dtype if data.features.dtype in (jnp.float32, jnp.float64) else jnp.float32
+    x = jnp.zeros((d,), dtype) if x0 is None else jnp.asarray(x0, dtype)
+    return FedNewState(
+        x=x,
+        y=jnp.zeros((d,), dtype),
+        lam=jnp.zeros((n, d), dtype),
+        chol=_factorize(obj, x, data, cfg),
+        y_hat=jnp.zeros((n, d), dtype),
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _local_solve(chol, rhs, cfg: FedNewConfig):
+    """(H_i + (alpha+rho) I)^{-1} rhs, batched over clients (eq. 9)."""
+    if cfg.use_kernel:
+        from repro.kernels.client_solve import ops as ksolve
+
+        # `chol` holds the raw Hessians on this path (see _factorize)
+        return ksolve.client_solve(chol, rhs, damping=cfg.damping)
+    return jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(chol, rhs)
+
+
+def step(
+    state: FedNewState, obj: Objective, data: ClientDataset, cfg: FedNewConfig
+):
+    """One outer round of Algorithm 1 (optionally quantized)."""
+    # -- local Hessian refresh (pure client-side compute; no communication) --
+    if cfg.hessian_period > 0:
+        refresh = (state.step % cfg.hessian_period) == 0
+        chol = jax.lax.cond(
+            refresh,
+            lambda: _factorize(obj, state.x, data, cfg),
+            lambda: state.chol,
+        )
+    else:
+        chol = state.chol
+
+    g_i = obj.local_grad(state.x, data)  # (n, d) — never transmitted
+
+    if cfg.bits is None:
+        ap = admm.one_pass(
+            g_i, state.lam, state.y, cfg.rho, lambda r: _local_solve(chol, r, cfg)
+        )
+        y_i_tx, y, lam, y_hat = ap.y_i, ap.y, ap.lam, state.y_hat
+        key = state.key
+        bits = jnp.asarray(exact_payload_bits(data.dim), jnp.int32)
+    else:
+        # Q-FedNew: solve eq. 9, quantize the transmitted vector, and run the
+        # aggregation + dual update on the *quantized* y_i so that the
+        # sum-lambda invariant is preserved (clients know their own y_hat).
+        rhs = admm.admm_rhs(g_i, state.lam, jnp.broadcast_to(state.y, g_i.shape), cfg.rho)
+        y_i = _local_solve(chol, rhs, cfg)
+        key, sub = jax.random.split(state.key)
+        qr = quantize_batch(sub, y_i, state.y_hat, cfg.bits)
+        y_i_tx, y_hat = qr.y_hat, qr.y_hat
+        y = jnp.mean(y_i_tx, axis=0)
+        lam = state.lam + cfg.rho * (y_i_tx - y)
+        bits = jnp.asarray(cfg.bits * data.dim + 32, jnp.int32)
+
+    x = state.x - y  # outer Newton step (eq. 14)
+
+    new_state = FedNewState(
+        x=x, y=y, lam=lam, chol=chol, y_hat=y_hat, key=key, step=state.step + 1
+    )
+    metrics = StepMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=bits,
+        dual_sum_residual=admm.dual_sum_residual(lam),
+        direction_norm=jnp.linalg.norm(y),
+    )
+    return new_state, metrics
+
+
+def run(
+    obj: Objective,
+    data: ClientDataset,
+    cfg: FedNewConfig,
+    rounds: int,
+    key: Optional[jax.Array] = None,
+    x0=None,
+):
+    """Driver: jits one step and iterates on the host, collecting metrics."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    state = init(obj, data, cfg, key, x0)
+    step_fn = jax.jit(lambda s: step(s, obj, data, cfg))
+    history = []
+    for _ in range(rounds):
+        state, m = step_fn(state)
+        history.append(m)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+    return state, stacked

@@ -1,0 +1,141 @@
+"""Matrix-free second-order oracles: HVPs and damped CG on pytrees.
+
+FedNew's client sub-problem (eq. 9) is the damped linear system
+
+    (H_i + (alpha+rho) I) y_i = rhs_i.
+
+At paper scale (d <= 267) we solve it with a cached Cholesky factor; at
+framework scale (the ten assigned architectures) H_i never exists as a
+matrix, so we solve the same system with conjugate gradients where each
+matvec is a Hessian-vector product:
+
+  * ``hvp``      — exact Pearlmutter HVP: jvp-of-grad, works through scans,
+                   MoE dispatch, chunked losses.
+  * ``gauss_newton_hvp`` — J^T H_out J v at a designated "features" cut
+                   (model backbone vs. convex head), PSD by construction,
+                   matching the convexity the paper's theory assumes.
+  * ``cg_solve`` — fixed-iteration damped CG on arbitrary pytrees. The
+                   (alpha+rho) damping bounds the condition number, so a
+                   small constant iteration count mirrors the paper's
+                   "one inexact pass" philosophy one level down.
+
+All tree ops route through jax.tree, so the same solver serves the logreg
+tests and 10^11-parameter models under pjit.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_dot(a, b) -> jax.Array:
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, preserving y's dtype (CG may run in bf16 state dtype
+    while alpha comes from f32 accumulated dot products)."""
+    return jax.tree.map(lambda a, b: (alpha * a).astype(b.dtype) + b, x, y)
+
+
+def tree_scale(alpha, x):
+    return jax.tree.map(lambda a: alpha * a, x)
+
+
+def hvp(loss_fn: Callable, params, v, *args):
+    """Exact Hessian-vector product via forward-over-reverse (Pearlmutter)."""
+    grad_fn = jax.grad(loss_fn)
+    _, tangent = jax.jvp(lambda p: grad_fn(p, *args), (params,), (v,))
+    return tangent
+
+
+def hvp_at_anchor(loss_fn: Callable, anchor_params, v, *args):
+    """HVP evaluated at stored x^0 — the paper's zeroth-Hessian (r=0) variant."""
+    return hvp(loss_fn, anchor_params, v, *args)
+
+
+def gauss_newton_hvp(
+    backbone_fn: Callable,  # params -> features pytree
+    head_loss_fn: Callable,  # features -> scalar loss (convex part)
+    params,
+    v,
+):
+    """GGN product: J_b^T  (d^2 L / d feat^2)  J_b  v.
+
+    ``backbone_fn`` closes over the batch; ``head_loss_fn`` closes over the
+    labels. PSD whenever the head loss is convex in the features (softmax-CE
+    is), which restores the paper's convexity assumption for the inner
+    quadratic model.
+    """
+    feats, ju = jax.jvp(backbone_fn, (params,), (v,))
+    hu = hvp(lambda f: head_loss_fn(f), feats, ju)
+    _, vjp_fn = jax.vjp(backbone_fn, params)
+    (out,) = vjp_fn(hu)
+    return out
+
+
+class CGResult(NamedTuple):
+    x: object
+    residual_norm: jax.Array
+    iterations: jax.Array
+
+
+def cg_solve(
+    matvec: Callable,
+    rhs,
+    damping: float,
+    iters: int = 8,
+    tol: float = 0.0,
+    x0=None,
+) -> CGResult:
+    """Solve (A + damping I) x = rhs with fixed-iteration CG on pytrees.
+
+    ``tol=0`` always runs ``iters`` iterations (static cost: what the dry-run
+    lowers); a positive tol short-circuits updates once the residual is small
+    (the iterates freeze, cost stays static — jit-friendly early exit).
+    """
+
+    def damped_mv(p):
+        return tree_axpy(damping, p, matvec(p))
+
+    x = jax.tree.map(jnp.zeros_like, rhs) if x0 is None else x0
+    r = jax.tree.map(lambda b, ax: b - ax, rhs, damped_mv(x)) if x0 is not None else rhs
+    p = r
+    rs = tree_dot(r, r)
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = damped_mv(p)
+        denom = tree_dot(p, ap)
+        live = rs > tol * tol
+        alpha = jnp.where(denom > 0, rs / jnp.maximum(denom, 1e-30), 0.0)
+        alpha = jnp.where(live, alpha, 0.0)
+        x = tree_axpy(alpha, p, x)
+        r = tree_axpy(-alpha, ap, r)
+        rs_new = tree_dot(r, r)
+        beta = jnp.where(live, rs_new / jnp.maximum(rs, 1e-30), 0.0)
+        p = tree_axpy(beta, p, r)
+        return x, r, p, rs_new
+
+    x, r, p, rs = jax.lax.fori_loop(0, iters, body, (x, r, p, rs))
+    return CGResult(x=x, residual_norm=jnp.sqrt(rs), iterations=jnp.asarray(iters))
+
+
+def make_damped_solver(loss_fn: Callable, damping: float, iters: int = 8):
+    """Returns solve(params, batch, rhs) -> y approximating
+    (H(params; batch) + damping I)^{-1} rhs with exact HVPs."""
+
+    def solve(params, batch, rhs):
+        mv = partial(hvp, loss_fn, params, *(), )  # placeholder, see below
+
+        def matvec(v):
+            return hvp(loss_fn, params, v, batch)
+
+        return cg_solve(matvec, rhs, damping, iters).x
+
+    return solve

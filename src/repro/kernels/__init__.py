@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots this system optimizes
+# (validated under interpret=True on CPU against each ref.py oracle):
+#   swa_attention — flash sliding-window attention (gemma/mixtral local layers)
+#   client_solve  — in-VMEM CG for FedNew's eq. 9 damped SPD solve
+#   stoch_quant   — Q-FedNew stochastic quantizer (eqs. 25-30)
+#   slstm_scan    — fused sLSTM recurrence (VMEM-resident state; §Perf pair C)

@@ -1,0 +1,3 @@
+from repro.kernels.client_solve.client_solve import client_solve_cg
+from repro.kernels.client_solve.ops import client_solve
+from repro.kernels.client_solve.ref import client_solve_ref

@@ -1,0 +1,78 @@
+"""Batched damped-SPD solve kernel for FedNew's client sub-problem (eq. 9).
+
+Each FL client must apply (H_i + (alpha+rho) I)^{-1} to its ADMM right-hand
+side every round. At paper scale (d ≤ 267) the whole damped Hessian tile fits
+VMEM with room to spare, so the TPU-native design (DESIGN.md §3.4) keeps
+A_i resident in VMEM and runs a fixed-iteration conjugate-gradient loop whose
+matvec is a (d × d)·(d,) MXU contraction — no HBM traffic inside the loop,
+one grid step per client.
+
+The damping (alpha + rho) bounds the condition number, so a modest fixed
+iteration count reaches float32 solve accuracy (tests sweep d, dtype, and
+iteration count against ``ref.py``'s direct solve).
+
+Shapes are padded to the 128-lane MXU tile by ``ops.py``; padding rows carry
+an identity diagonal and zero rhs so they solve to exactly zero.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, x_ref, *, iters: int, damping: float):
+    A = a_ref[0].astype(jnp.float32)  # (d, d) resident in VMEM
+    b = b_ref[...].astype(jnp.float32)  # (1, d)
+
+    def matvec(p):  # (1,d) @ (d,d) on the MXU; A is symmetric
+        return jax.lax.dot_general(
+            p, A, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) + damping * p
+
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = jnp.sum(r * r)
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        denom = jnp.sum(p * ap)
+        alpha = jnp.where(denom > 0, rs / jnp.maximum(denom, 1e-30), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.sum(r * r)
+        beta = jnp.where(rs > 0, rs_new / jnp.maximum(rs, 1e-30), 0.0)
+        p = r + beta * p
+        return x, r, p, rs_new
+
+    x, r, p, rs = jax.lax.fori_loop(0, iters, body, (x, r, p, rs))
+    x_ref[...] = x.astype(x_ref.dtype)
+
+
+def client_solve_cg(
+    A: jax.Array,  # (n, d, d) — local Hessians, WITHOUT damping
+    b: jax.Array,  # (n, d) — ADMM rhs g_i - lam_i + rho y
+    *,
+    damping: float,
+    iters: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n, d) solutions of (A_i + damping·I) x = b_i, one grid step/client."""
+    n, d, _ = A.shape
+    kernel = functools.partial(_kernel, iters=iters, damping=damping)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), b.dtype),
+        interpret=interpret,
+    )(A, b)

@@ -1,0 +1,14 @@
+"""Direct-solve oracle for the client_solve kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def client_solve_ref(A, b, *, damping: float):
+    """(n,d,d), (n,d) -> exact (A_i + damping I)^{-1} b_i via LU."""
+    d = A.shape[-1]
+    damped = A.astype(jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    damped = damped + damping * jnp.eye(d, dtype=damped.dtype)
+    return jax.vmap(jnp.linalg.solve)(damped, b.astype(damped.dtype)).astype(b.dtype)

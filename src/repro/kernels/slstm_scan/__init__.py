@@ -1,0 +1,3 @@
+from repro.kernels.slstm_scan.ops import slstm_scan
+from repro.kernels.slstm_scan.ref import slstm_scan_ref
+from repro.kernels.slstm_scan.slstm_scan import slstm_scan as slstm_scan_fwd

@@ -1,0 +1,28 @@
+"""Jit wrapper: model-facing entry for the fused sLSTM recurrence.
+
+``repro.models.xlstm.slstm_apply`` dispatches here when ``cfg.use_pallas``
+(forward/serving paths; the kernel defines no VJP)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.slstm_scan.slstm_scan import slstm_scan as _kernel_call
+
+
+def _block(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (time blocks must tile S)."""
+    tb = min(target, S)
+    while S % tb:
+        tb -= 1
+    return tb
+
+
+@partial(jax.jit, static_argnames=("t_blk", "interpret"))
+def slstm_scan(x4, r, bias, state, *, t_blk: int = 256, interpret: bool = True):
+    B, S, _ = x4.shape
+    return _kernel_call(
+        x4, r, bias, state, t_blk=_block(S, t_blk), interpret=interpret
+    )

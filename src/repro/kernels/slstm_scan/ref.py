@@ -1,0 +1,34 @@
+"""jnp oracle for the fused sLSTM kernel: the time-step scan from
+``repro.models.xlstm`` expressed standalone (same math, same stabilizers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(x4, r, bias, state):
+    """x4 (B,S,4D); r (H,w,4w); bias (4D,); state 4x (B,D) f32."""
+    B, S, D4 = x4.shape
+    D = D4 // 4
+    H = r.shape[0]
+    w = D // H
+
+    def cell(carry, xt4):
+        h, c, n, m = carry
+        rh = jnp.einsum(
+            "bhw,hwf->bhf", h.reshape(B, H, w), r.astype(jnp.float32)
+        ).reshape(B, 4 * D)
+        pre = xt4.astype(jnp.float32) + rh + bias.astype(jnp.float32)
+        i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(lf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(z_t)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    carry, hs = jax.lax.scan(cell, state, x4.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), carry

@@ -1,0 +1,126 @@
+"""Fused sLSTM recurrence kernel (TPU Pallas) — the §Perf pair-C fix.
+
+The sLSTM is inherently sequential (memory mixing through the block-diagonal
+recurrence R forbids time-parallelization — the xLSTM paper ships a fused
+CUDA kernel for exactly this reason). Under XLA the per-timestep state and
+gate tensors cross an HBM fusion boundary 4096 times per sequence; this
+kernel is the TPU-native answer: the recurrent state (h, c, n, m) and the
+block-diagonal R live in VMEM for an entire time block, and the grid walks
+time blocks sequentially with the state carried in VMEM scratch.
+
+Grid: (n_time_blocks,) — TPU grids execute sequentially, so scratch carries
+(h, c, n, m) across blocks; block 0 loads the initial state, the last block
+writes the final state out.
+
+Layout: x4 (B, S, 4D) pre-computed input projections (one big matmul done
+outside, MXU-friendly); r (H, w, 4w) block-diagonal recurrence; out hs
+(B, S, D). Numerics mirror ``repro.models.xlstm._slstm_cell`` exactly
+(log-space stabilizer m, normalizer n), f32 throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x4_ref, r_ref, b_ref, h0_ref, c0_ref, n0_ref, m0_ref,
+            hs_ref, hT_ref, cT_ref, nT_ref, mT_ref,
+            h_scr, c_scr, n_scr, m_scr, *, t_blk: int, n_blocks: int):
+    tb = pl.program_id(0)
+
+    @pl.when(tb == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+        c_scr[...] = c0_ref[...].astype(jnp.float32)
+        n_scr[...] = n0_ref[...].astype(jnp.float32)
+        m_scr[...] = m0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)  # (H, w, 4w) resident in VMEM
+    bias = b_ref[...].astype(jnp.float32)  # (4D,)
+    B = h_scr.shape[0]
+    D = h_scr.shape[1]
+    H, w, _ = r.shape
+
+    def step(t, _):
+        h, c, n, m = h_scr[...], c_scr[...], n_scr[...], m_scr[...]
+        xt4 = x4_ref[:, t].astype(jnp.float32)  # (B, 4D)
+        # block-diagonal recurrence on the MXU: (B,H,w) x (H,w,4w) -> (B,H,4w)
+        rh = jax.lax.dot_general(
+            h.reshape(B, H, w), r,
+            (((2,), (1,)), ((1,), (0,))),  # contract w; batch H
+            preferred_element_type=jnp.float32,
+        )  # (H, B, 4w)
+        rh = rh.transpose(1, 0, 2).reshape(B, 4 * D)
+        pre = xt4 + rh + bias
+        i_t = pre[:, :D]
+        f_t = pre[:, D:2 * D]
+        z_t = pre[:, 2 * D:3 * D]
+        o_t = pre[:, 3 * D:]
+        lf = -jnp.logaddexp(0.0, -f_t)  # log sigmoid
+        m_new = jnp.maximum(lf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(z_t)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+        hs_ref[:, t] = h_new.astype(hs_ref.dtype)
+        h_scr[...], c_scr[...], n_scr[...], m_scr[...] = h_new, c_new, n_new, m_new
+        return ()
+
+    jax.lax.fori_loop(0, t_blk, step, ())
+
+    @pl.when(tb == n_blocks - 1)
+    def _final():
+        hT_ref[...] = h_scr[...]
+        cT_ref[...] = c_scr[...]
+        nT_ref[...] = n_scr[...]
+        mT_ref[...] = m_scr[...]
+
+
+def slstm_scan(
+    x4: jax.Array,  # (B, S, 4D) input projections (+0; bias added in-kernel)
+    r: jax.Array,  # (H, w, 4w) block-diagonal recurrence
+    bias: jax.Array,  # (4D,)
+    state: tuple,  # (h, c, n, m) each (B, D) f32
+    *,
+    t_blk: int = 256,
+    interpret: bool = False,
+):
+    """Returns (hs (B, S, D) f32, (hT, cT, nT, mT))."""
+    B, S, D4 = x4.shape
+    D = D4 // 4
+    assert S % t_blk == 0, (S, t_blk)
+    n_blocks = S // t_blk
+    h0, c0, n0, m0 = state
+    kernel = functools.partial(_kernel, t_blk=t_blk, n_blocks=n_blocks)
+    st_spec = pl.BlockSpec((B, D), lambda tb: (0, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((B, t_blk, D4), lambda tb: (0, tb, 0)),
+            pl.BlockSpec(r.shape, lambda tb: (0, 0, 0)),
+            pl.BlockSpec(bias.shape, lambda tb: (0,)),
+            st_spec, st_spec, st_spec, st_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((B, t_blk, D), lambda tb: (0, tb, 0)),
+            st_spec, st_spec, st_spec, st_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B, D), jnp.float32)] * 4,
+        interpret=interpret,
+    )(x4, r, bias, h0, c0, n0, m0)
+    hs, hT, cT, nT, mT = outs
+    return hs, (hT, cT, nT, mT)

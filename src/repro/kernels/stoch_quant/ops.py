@@ -1,0 +1,33 @@
+"""Jit wrapper: PRNG handling, padding, and the (levels, ŷ, Δ, payload)
+result tuple matching ``repro.core.quantization.QuantResult``."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import R_BITS, QuantResult
+from repro.kernels.stoch_quant.stoch_quant import stoch_quant
+
+BLOCK = 1024
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize(key, y: jax.Array, y_hat_prev: jax.Array, bits: int,
+             *, interpret: bool = True) -> QuantResult:
+    """Kernel-backed drop-in for ``quantization.quantize`` (1-D input)."""
+    (N,) = y.shape
+    Np = -(-N // BLOCK) * BLOCK
+    u = jax.random.uniform(key, (Np,), jnp.float32)
+    R = jnp.max(jnp.abs(y - y_hat_prev))
+    yp = jnp.pad(y, (0, Np - N))
+    pp = jnp.pad(y_hat_prev, (0, Np - N))
+    q, y_hat = stoch_quant(yp, pp, u, R, bits=bits, interpret=interpret)
+    n_levels = (1 << bits) - 1
+    delta = 2.0 * R / n_levels
+    payload = jnp.asarray(bits * N + R_BITS, jnp.int32)
+    return QuantResult(
+        y_hat=y_hat[:N], levels=q[:N], delta=delta, payload_bits=payload
+    )

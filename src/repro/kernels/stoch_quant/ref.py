@@ -1,0 +1,20 @@
+"""jnp oracle for the stoch_quant kernel: the paper's eqs. 25-30 given
+pre-drawn uniforms (bit-exact contract with the kernel)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stoch_quant_ref(y, y_hat_prev, u, R, *, bits: int):
+    yf = y.astype(jnp.float32)
+    pf = y_hat_prev.astype(jnp.float32)
+    n_levels = float((1 << bits) - 1)
+    R = jnp.asarray(R, jnp.float32).reshape(())
+    delta = 2.0 * R / n_levels
+    safe_delta = jnp.where(delta > 0, delta, 1.0)
+    c = (yf - pf + R) / safe_delta
+    lo = jnp.floor(c)
+    q = lo + (u.astype(jnp.float32) < (c - lo)).astype(jnp.float32)
+    q = jnp.clip(q, 0.0, n_levels)
+    return q.astype(jnp.int32), (pf + delta * q - R).astype(y.dtype)

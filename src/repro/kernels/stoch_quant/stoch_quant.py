@@ -1,0 +1,79 @@
+"""Stochastic quantizer kernel for Q-FedNew (paper eqs. 25-30).
+
+Elementwise map over the client's direction vector: given the previous
+quantized vector, the scalar range R (computed by a cheap jnp max outside —
+it is one reduction; the elementwise pass is the byte-moving hot loop), and
+pre-drawn uniforms, emit the integer levels and the dequantized vector.
+
+Grid: 1-D over 128·8-aligned blocks of the flattened vector; every block
+loads (y, ŷ_prev, u) tiles into VMEM, computes
+
+    c  = (y - ŷ + R) / Δ,   Δ = 2R / (2^bits - 1)
+    q  = floor(c) + [u < frac(c)]          (unbiased, eq. 26-28)
+    ŷ' = ŷ + Δ·q - R                        (eq. 30)
+
+entirely in registers/VMEM, and writes (q, ŷ') back. The uniforms are taken
+as an input (rather than seeding in-kernel) so the kernel is bit-exact
+against ``ref.py`` under any PRNG.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, prev_ref, u_ref, r_ref, q_ref, out_ref, *, bits: int):
+    y = y_ref[...].astype(jnp.float32)
+    prev = prev_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    R = r_ref[0, 0]
+    n_levels = float((1 << bits) - 1)
+    delta = 2.0 * R / n_levels
+    safe_delta = jnp.where(delta > 0, delta, 1.0)
+    c = (y - prev + R) / safe_delta
+    lo = jnp.floor(c)
+    q = lo + (u < (c - lo)).astype(jnp.float32)
+    q = jnp.clip(q, 0.0, n_levels)
+    q_ref[...] = q.astype(q_ref.dtype)
+    out_ref[...] = (prev + delta * q - R).astype(out_ref.dtype)
+
+
+def stoch_quant(
+    y: jax.Array,  # (N,) flattened direction
+    y_hat_prev: jax.Array,  # (N,)
+    u: jax.Array,  # (N,) uniforms in [0, 1)
+    R: jax.Array,  # () or (1,) scalar range max|y - y_hat_prev|
+    *,
+    bits: int,
+    block: int = 1024,
+    interpret: bool = False,
+):
+    """Returns (levels int32 (N,), y_hat (N,))."""
+    (N,) = y.shape
+    assert N % block == 0, (N, block)
+    grid = (N // block,)
+    R2 = jnp.reshape(R.astype(jnp.float32), (1, 1))
+    kernel = functools.partial(_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), y.dtype),
+        ],
+        interpret=interpret,
+    )(y, y_hat_prev, u, R2)

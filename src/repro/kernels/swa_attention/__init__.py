@@ -1,0 +1,3 @@
+from repro.kernels.swa_attention.ops import swa_attention
+from repro.kernels.swa_attention.ref import swa_attention_ref
+from repro.kernels.swa_attention.swa_attention import swa_attention_fwd

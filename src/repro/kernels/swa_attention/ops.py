@@ -1,0 +1,42 @@
+"""Jit-ready wrapper: model-layout adapter for the SWA Pallas kernel.
+
+``swa_attention(q, k, v, window, ...)`` takes the model's (B, S, H, Dh) /
+(B, S, Hkv, Dh) layout, flattens heads into the kernel's row-major grid,
+dispatches to the Pallas kernel (interpret=True on CPU so tests exercise the
+real kernel body), and restores the layout. This is what
+``repro.models.attention`` calls when ``cfg.use_pallas`` is set.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.swa_attention import swa_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("window", "q_blk", "cap", "interpret"))
+def swa_attention(
+    q: jax.Array,  # (B, S, H, Dh)
+    k: jax.Array,  # (B, S, Hkv, Dh)
+    v: jax.Array,
+    *,
+    window: int,
+    q_blk: int = 128,
+    cap: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    # rows G-major within each kv head: q row b*H + h_kv*G + g
+    q2 = q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    k2 = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+    v2 = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+    out = swa_attention_fwd(
+        q2, k2, v2, window=window, groups=G, q_blk=min(q_blk, S), cap=cap,
+        interpret=interpret,
+    )
+    return out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the sliding-window attention kernel.
+
+Deliberately naive: materializes the full (S, S) mask. Only run at test
+sizes; the kernel and ``repro.models.attention`` are the production paths.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def swa_attention_ref(q, k, v, *, window: int, groups: int = 1, cap=None):
+    """q (BH, S, dh); k/v (BHkv, S, dh); row r of q attends kv row r//groups."""
+    BH, S, dh = q.shape
+    kx = jnp.repeat(k, groups, axis=0)
+    vx = jnp.repeat(v, groups, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    s = s * (dh ** -0.5)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    pos = jnp.arange(S)
+    valid = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
+    s = jnp.where(valid[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vx.astype(jnp.float32)).astype(q.dtype)

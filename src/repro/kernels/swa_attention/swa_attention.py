@@ -1,0 +1,117 @@
+"""Sliding-window flash-attention forward kernel (TPU Pallas).
+
+The hot loop of the gemma3/gemma2/mixtral/recurrentgemma local layers: causal
+attention restricted to the last ``window`` keys. The kernel tiles the query
+axis into MXU-aligned blocks held in VMEM and walks only the KV blocks that
+can intersect the window band — O(S · window) work and O(block) VMEM, versus
+O(S²) for naive masking.
+
+Grid: (B · Hkv · G, nq, nwin) — the innermost axis walks the band's KV blocks
+with the online-softmax (m, l, acc) carried in VMEM scratch across grid
+steps (TPU grids are sequential-minor, the canonical flash pattern).
+Out-of-range band blocks are index-clamped to 0 and neutralized by the
+position mask (clamped ≠ intended ⇒ every position fails the window test).
+
+Numerics match ``ref.py`` (and ``repro.models.attention``): f32 scores and
+accumulation, optional logit softcap, outputs cast to the query dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            window: int, q_blk: int, nwin: int, cap, scale: float):
+    iq = pl.program_id(1)
+    j = pl.program_id(2)
+
+    intended = iq - (nwin - 1) + j  # kv block index the band wants
+    q = q_ref[0].astype(jnp.float32)  # (q_blk, dh)
+    k = k_ref[0].astype(jnp.float32)  # (q_blk, dh) — kv tiled at q_blk
+    v = v_ref[0].astype(jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (q_blk, q_blk)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    qpos = iq * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, q_blk), 0)
+    kpos = intended * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, q_blk), 1)
+    valid = (kpos <= qpos) & (kpos > qpos - window) & (kpos >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == nwin - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def swa_attention_fwd(
+    q: jax.Array,  # (BH, S, dh) — B*Hkv*G rows, G-major within a kv head
+    k: jax.Array,  # (BHkv, S, dh)
+    v: jax.Array,
+    *,
+    window: int,
+    groups: int = 1,  # G = H // Hkv; q row r reads kv row r // G
+    q_blk: int = 128,
+    cap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, dh = q.shape
+    assert S % q_blk == 0, (S, q_blk)
+    nq = S // q_blk
+    nwin = -(-window // q_blk) + 1  # ceil + the diagonal block
+    scale = dh ** -0.5
+
+    def q_map(b, iq, j):
+        return (b, iq, 0)
+
+    def kv_map(b, iq, j):
+        blk = iq - (nwin - 1) + j
+        return (b // groups, jnp.maximum(blk, 0), 0)
+
+    kernel = functools.partial(
+        _kernel, window=window, q_blk=q_blk, nwin=nwin, cap=cap, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nwin),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, dh), q_map),
+            pl.BlockSpec((1, q_blk, dh), kv_map),
+            pl.BlockSpec((1, q_blk, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk,), jnp.float32),
+            pltpu.VMEM((q_blk,), jnp.float32),
+            pltpu.VMEM((q_blk, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,228 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this driver
+
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. assembles the step (FedNew-HF train / prefill / decode) with explicit
+     in/out_shardings from ``repro.sharding.specs``,
+  3. ``jit(...).lower(**abstract inputs)`` and ``.compile()`` — proving the
+     sharding config is coherent end-to-end with zero allocation,
+  4. records memory_analysis / cost_analysis / per-chip collective bytes and
+     the three roofline terms into ``launch/out/dryrun_<mesh>.json``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all 40 combos
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --refresh      # ignore cache
+
+The JSON cache keyed by (arch, shape, mesh, fingerprint) feeds the roofline
+table in EXPERIMENTS.md and the §Perf iteration loop.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+import gzip
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import LONG_CONTEXT_OK, get_config, model_archs
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import Roofline, model_flops
+from repro.roofline.hlo_cost import analyze
+from repro.sharding import specs as sh
+from repro.train import steps as steps_mod
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def combo_skip_reason(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not LONG_CONTEXT_OK[arch]:
+        return "full-attention arch at 512k (DESIGN.md sub-quadratic gate)"
+    return None
+
+
+def run_combo(arch: str, shape_name: str, mesh, *, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    bundle = steps_mod.make_bundle(cfg, mesh, shape)
+    with mesh:
+        lowered = bundle.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop-aware re-analysis (XLA's cost_analysis counts while bodies once)
+    la = analyze(hlo)
+    _dump_hlo(arch, shape_name, mesh, hlo)
+
+    resident = float(mem.argument_size_in_bytes + mem.output_size_in_bytes)
+    temp_sum = float(mem.temp_size_in_bytes)  # no-reuse upper bound on CPU
+    rl = Roofline(
+        flops_per_chip=la["flops"],
+        bytes_per_chip=la["bytes"],
+        collective_bytes_per_chip=la["collective_bytes"],
+        model_flops_per_chip=model_flops(cfg, shape, n_chips),
+        peak_bytes_per_chip=resident,
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_clients": bundle.n_clients,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "resident_bytes_per_chip": resident,
+        "temp_sum_bytes_per_chip": temp_sum,
+        "coll_by_op": la["coll_by_op"],
+        "unknown_loops": la["unknown_loops"],
+        "xla_cost_analysis": {
+            "flops_body_once": float(cost.get("flops", 0.0)),
+            "bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "roofline": rl.as_dict(),
+    }
+    if verbose:
+        print(
+            f"  ok   n_clients={bundle.n_clients:<3d} "
+            f"resident={resident/2**30:6.2f} GiB/chip "
+            f"flops={la['flops']:9.3e} coll={la['collective_bytes']:9.3e}B "
+            f"dom={rl.dominant:<10s} useful={rl.useful_flop_ratio:5.3f} "
+            f"[lower {t_lower:.0f}s compile {t_compile:.0f}s]"
+        )
+    return rec
+
+
+def _dump_hlo(arch, shape_name, mesh, hlo_text) -> None:
+    """Persist the per-device HLO (gzipped) for offline §Perf analysis."""
+    d = os.path.join(OUT_DIR, "hlo")
+    os.makedirs(d, exist_ok=True)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    path = os.path.join(d, f"{arch}_{shape_name}_{mesh_name}.hlo.gz")
+    with gzip.open(path, "wt") as f:
+        f.write(hlo_text)
+
+
+def fingerprint(arch: str) -> str:
+    """Config-sensitive cache key component (perf iterations change configs)."""
+    cfg = get_config(arch)
+    return str(hash(repr(cfg)))
+
+
+def reanalyze(mesh_name: str) -> None:
+    """Re-run the loop-aware analysis over the saved HLO dumps (no compile):
+    used when the *accounting* changes but the programs did not."""
+    cache_path = os.path.join(OUT_DIR, f"dryrun_{mesh_name}.json")
+    with open(cache_path) as f:
+        cache = json.load(f)
+    mesh_shape = "2x16x16" if mesh_name.startswith("multipod") else "16x16"
+    n_chips = 512 if mesh_name.startswith("multipod") else 256
+    for key, rec in cache.items():
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = os.path.join(
+            OUT_DIR, "hlo", f"{rec['arch']}_{rec['shape']}_{mesh_shape}.hlo.gz"
+        )
+        if not os.path.exists(hlo_path):
+            print(f"missing dump for {key}; skipping")
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            la = analyze(f.read())
+        cfg = get_config(rec["arch"])
+        rl = Roofline(
+            flops_per_chip=la["flops"],
+            bytes_per_chip=la["bytes"],
+            collective_bytes_per_chip=la["collective_bytes"],
+            model_flops_per_chip=model_flops(cfg, INPUT_SHAPES[rec["shape"]], n_chips),
+            peak_bytes_per_chip=rec["resident_bytes_per_chip"],
+        )
+        rec["coll_by_op"] = la["coll_by_op"]
+        rec["unknown_loops"] = la["unknown_loops"]
+        rec["roofline"] = rl.as_dict()
+        print(f"{rec['arch']:18s} {rec['shape']:12s} dom={rl.dominant:<10s} "
+              f"mem_s={rl.memory_s:9.3g} comp_s={rl.compute_s:9.3g} coll_s={rl.collective_s:9.3g}")
+    with open(cache_path, "w") as f:
+        json.dump(cache, f, indent=1)
+    print(f"re-analyzed {cache_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--refresh", action="store_true", help="ignore cached results")
+    ap.add_argument("--tag", default="", help="suffix for the output JSON (perf iters)")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute roofline terms from saved HLO dumps only")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze(("multipod" if args.multi_pod else "singlepod")
+                  + (f"_{args.tag}" if args.tag else ""))
+        return
+
+    assert len(jax.devices()) == 512, "dry-run needs the 512 placeholder devices"
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = ("multipod" if args.multi_pod else "singlepod") + (
+        f"_{args.tag}" if args.tag else ""
+    )
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cache_path = os.path.join(OUT_DIR, f"dryrun_{mesh_name}.json")
+    cache = {}
+    if os.path.exists(cache_path):
+        with open(cache_path) as f:
+            cache = json.load(f)  # --refresh re-runs combos but keeps the rest
+
+    archs = [args.arch] if args.arch else list(model_archs())
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            key = f"{arch}|{shape_name}|{fingerprint(arch)}"
+            print(f"{arch} × {shape_name} × {mesh_name}:", flush=True)
+            skip = combo_skip_reason(arch, shape_name)
+            if skip:
+                print(f"  SKIP {skip}")
+                cache[key] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_name, "status": "skip", "reason": skip}
+                continue
+            if key in cache and cache[key]["status"] == "ok" and not args.refresh:
+                r = cache[key]["roofline"]
+                print(f"  ok (cached) dom={r['dominant']} useful={r['useful_flop_ratio']:.3f}")
+                continue
+            try:
+                cache[key] = run_combo(arch, shape_name, mesh)
+            except Exception as e:  # a failure here is a sharding bug: record it
+                n_fail += 1
+                cache[key] = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                              "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                print(f"  FAIL {type(e).__name__}: {e}")
+                traceback.print_exc(limit=4)
+            with open(cache_path, "w") as f:
+                json.dump(cache, f, indent=1)
+
+    print(f"\nwrote {cache_path}; failures this run: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

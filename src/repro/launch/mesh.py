@@ -1,0 +1,26 @@
+"""Mesh construction. Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production target: TPU v5e, 256 chips/pod.
+
+    single-pod: (16, 16)  ('data', 'model')
+    multi-pod:  (2, 16, 16) ('pod', 'data', 'model') — the 'pod' axis models
+    the slow inter-pod (DCN/WAN) links; FedNew's client aggregation is the
+    only collective that must cross it for pod-federated configs.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this host offers (tests/examples): 1 device -> (1,1) mesh so
+    the same sharded code paths run unchanged."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,71 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.tokens import make_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.sharding import specs as sh
+from repro.train.steps import _with_rules
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    total = args.prompt_len + args.gen
+    shape = InputShape("cli_prompt", args.prompt_len, args.batch, "prefill")
+    rules = sh.activation_rules(cfg, mesh, batch=args.batch)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    batch = make_batch(cfg, shape, args.seed)
+    prompt = {k: v for k, v in batch.items() if k not in ("targets", "loss_mask")}
+
+    prefill = jax.jit(_with_rules(
+        lambda p, b: lm.prefill(p, cfg, b, max_len=total + cfg.n_patches), rules, mesh))
+    decode = jax.jit(_with_rules(
+        lambda p, t, pos, c: lm.decode_step(p, cfg, t, pos, c), rules, mesh))
+
+    with mesh:
+        t0 = time.time()
+        logits, caches = prefill(params, prompt)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out = [tok]
+        offset = cfg.n_patches if cfg.vit_embed_dim else 0
+        for i in range(args.gen - 1):
+            pos = jnp.full((args.batch,), offset + args.prompt_len + i, jnp.int32)
+            logits, caches = decode(params, tok[:, None], pos, caches)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        gen = jnp.stack(out, axis=1)
+        jax.block_until_ready(gen)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"generated token ids (first row): {gen[0].tolist()}")
+    print(f"wall {dt:.2f}s  ({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+        --rounds 100 --reduced --optimizer fednew
+
+``--reduced`` runs the laptop-scale variant of the same architecture family
+(what fits this container); without it the full assigned config is built —
+on real hardware that's the production path, on CPU it will be slow/OOM.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs.base import InputShape
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.train.loop import train_fedgd, train_fednew
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--optimizer", choices=("fednew", "fedgd"), default="fednew")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--hessian-period", type=int, default=1,
+                    help="r=1 -> 1; r=0 -> anchor at x^0 (use 0)")
+    ap.add_argument("--bits", type=int, default=0, help="Q-FedNew-HF uplink bits")
+    ap.add_argument("--cg-iters", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    fed = dataclasses.replace(
+        cfg.fed,
+        cg_iters=args.cg_iters,
+        hessian_at_init=args.hessian_period == 0,
+        bits=args.bits or None,
+    )
+    cfg = dataclasses.replace(cfg, fed=fed)
+    shape = InputShape("cli_train", args.seq_len, args.global_batch, "train")
+    mesh = make_host_mesh()
+    if args.optimizer == "fednew":
+        train_fednew(
+            cfg, mesh, shape, args.rounds, seed=args.seed,
+            ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+        )
+    else:
+        train_fedgd(cfg, mesh, shape, args.rounds, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

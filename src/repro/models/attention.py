@@ -1,0 +1,314 @@
+"""GQA attention: full / sliding-window / cross, train + prefill + decode.
+
+Training/prefill paths never materialize (S x S) score matrices: a scan over
+query chunks with an online-softmax inner loop (flash-attention recurrence,
+pure jnp) keeps the transient footprint at (B, q_chunk, H, kv_chunk). The
+sliding-window path slices only the in-window KV band per query chunk, so
+local layers are O(S * (window + chunk)) — this is what makes long-context
+shapes lowerable for the gemma/mixtral/recurrentgemma families.
+
+The Pallas TPU kernel in ``repro.kernels.swa_attention`` implements the same
+online-softmax tiling for the sliding-window case; ``ops.swa_attention``
+dispatches to it when ``cfg.use_pallas`` (tests validate against this file's
+jnp path as the oracle).
+
+Decode attends one query position against a (possibly length-sharded) KV
+cache with plain einsums — reductions over the sharded length axis lower to
+the partial-softmax collectives GSPMD derives automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init, rope, softcap
+from repro.sharding.api import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype, *, cross: bool = False) -> dict:
+    dh = cfg.resolved_head_dim
+    kq, kk, kv, ko, _ = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * dh, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ko, cfg.n_heads * dh, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["qnorm"] = rmsnorm_init(dh, dtype)
+        p["knorm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, xq, xkv):
+    dh = cfg.resolved_head_dim
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    q = dense(params["wq"], xq).reshape(B, Sq, cfg.n_heads, dh)
+    k = dense(params["wk"], xkv).reshape(B, Skv, cfg.n_kv_heads, dh)
+    v = dense(params["wv"], xkv).reshape(B, Skv, cfg.n_kv_heads, dh)
+    if "qnorm" in params:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    q = constrain(q, ("batch", None, "heads", "head_dim"))
+    k = constrain(k, ("batch", None, "kv", "head_dim"))
+    v = constrain(v, ("batch", None, "kv", "head_dim"))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention tiles
+# ---------------------------------------------------------------------------
+
+
+def _scores(q, k, scale, cap):
+    """q (B,Q,Hkv,G,Dh) x k (B,K,Hkv,Dh) -> (B,Hkv,G,Q,K) in f32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    return softcap(s * scale, cap)
+
+
+def _online_update(m, l, acc, s, v, mask):
+    """One online-softmax accumulation step. s (B,H,G,Q,K) f32."""
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    acc = acc * corr[..., None] + pv
+    return m_new, l, acc
+
+
+def _finalize(m, l, acc, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(dtype)  # (B,H,G,Q,Dh)
+
+
+# ---------------------------------------------------------------------------
+# training/prefill attention over full sequences
+# ---------------------------------------------------------------------------
+
+
+def causal_attention(q, k, v, cfg: ModelConfig, *, window: int | None, cap: float | None):
+    """Chunked causal (optionally sliding-window) attention.
+
+    q (B,S,H,Dh), k/v (B,S,Hkv,Dh) -> (B,S,H,Dh).
+    """
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = Dh ** -0.5
+    if window and cfg.use_pallas:
+        # Pallas TPU flash-SWA kernel (forward-only: serving/prefill paths;
+        # interpret=True executes the kernel body on CPU). Oracle-validated
+        # against this file's jnp path in tests/test_kernels.py.
+        from repro.kernels.swa_attention import ops as swa_ops
+
+        return swa_ops.swa_attention(
+            q, k, v, window=window, q_blk=min(128, S), cap=cap,
+            interpret=jax.default_backend() != "tpu",
+        )
+    qc = min(cfg.attn_q_chunk, S)
+    kc = min(cfg.attn_kv_chunk, S)
+    assert S % qc == 0, (S, qc)
+    nq = S // qc
+    q5 = q.reshape(B, nq, qc, Hkv, G, Dh)
+    q5 = constrain(q5, ("batch", None, "seq_q", "kv", None, "head_dim"))
+
+    if window:
+        # Local band: each query chunk needs KV rows [start, start+qc+window).
+        band = window + qc
+        # pad kv on the left so every slice is in-bounds and static-size
+        kp = constrain(jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0))),
+                       ("batch", None, "kv", "head_dim"))
+        vp = constrain(jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0))),
+                       ("batch", None, "kv", "head_dim"))
+
+        def q_step(_, iq):
+            qi = q5[:, iq]  # (B,qc,Hkv,G,Dh)
+            start = iq * qc  # slice [start, start+band) of padded == [start-window, ...)
+            kb = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+            qpos = start + jnp.arange(qc)
+            kpos = start - window + jnp.arange(band)
+            valid = (kpos[None, :] <= qpos[:, None]) & (
+                kpos[None, :] > qpos[:, None] - window  # last `window` keys incl. self
+            ) & (kpos[None, :] >= 0)
+            s = _scores(qi, kb, scale, cap)
+            m = jnp.full(s.shape[:-1], NEG_INF, jnp.float32)
+            l = jnp.zeros(s.shape[:-1], jnp.float32)
+            acc = jnp.zeros((*s.shape[:-1], Dh), jnp.float32)
+            m, l, acc = _online_update(m, l, acc, s, vb, valid[None, None, None])
+            return None, _finalize(m, l, acc, q.dtype)
+
+        _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+        # out (nq, B, Hkv, G, qc, Dh) -> (B, S, H, Dh)
+        out = jnp.moveaxis(out, 0, 3)  # (B,Hkv,G,nq,qc,Dh)
+        return out.reshape(B, Hkv, G, S, Dh).transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+    # Full causal: scan query chunks; inner fori over kv chunks with the
+    # online-softmax recurrence. (Block-triangular skipping is a perf-pass
+    # option; the mask keeps semantics exact.)
+    nk = S // kc
+    k4 = constrain(k.reshape(B, nk, kc, Hkv, Dh), ("batch", None, None, "kv", "head_dim"))
+    v4 = constrain(v.reshape(B, nk, kc, Hkv, Dh), ("batch", None, None, "kv", "head_dim"))
+
+    def q_step(_, iq):
+        qi = q5[:, iq]
+        qpos = iq * qc + jnp.arange(qc)
+        # NOTE: the kv loop runs over ALL chunks with a causal mask (static
+        # trip count keeps reverse-mode AD available). Roughly 2x the causal
+        # FLOP optimum — measured and attacked in EXPERIMENTS.md §Perf via the
+        # inference-only ragged bound.
+
+        def kv_step(jk, carry):
+            m, l, acc = carry
+            kb = k4[:, jk]
+            vb = v4[:, jk]
+            kpos = jk * kc + jnp.arange(kc)
+            valid = kpos[None, :] <= qpos[:, None]
+            s = _scores(qi, kb, scale, cap)
+            return _online_update(m, l, acc, s, vb, valid[None, None, None])
+
+        m = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, qc, Dh), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, nk, kv_step, (m, l, acc))
+        return None, _finalize(m, l, acc, q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 3)
+    return out.reshape(B, Hkv, G, S, Dh).transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh)
+
+
+def bidirectional_attention(q, k, v, cap: float | None):
+    """Unmasked attention (whisper encoder / cross-attention). Direct einsum:
+    source length is short (<=1500 frames)."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    q5 = q.reshape(B, Sq, Hkv, G, Dh)
+    s = _scores(q5, k, Dh ** -0.5, cap)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def decode_attention(q, k_cache, v_cache, valid, cap: float | None):
+    """One-token decode. q (B,1,H,Dh); caches (B,L,Hkv,Dh); valid (B,L) bool.
+
+    Pure einsum + masked softmax: when the cache length axis is sharded,
+    GSPMD lowers the max/sum reductions to the flash-decode-style partial
+    softmax combine across shards.
+    """
+    B, _, H, Dh = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    q5 = q.reshape(B, 1, Hkv, G, Dh)
+    s = _scores(q5, k_cache, Dh ** -0.5, cap)  # (B,Hkv,G,1,L)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", (p / l).astype(v_cache.dtype), v_cache)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# layer-level apply (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def self_attention(
+    params,
+    cfg: ModelConfig,
+    x,
+    kind: str,  # 'global' | 'local'
+    positions,
+    cache: dict | None = None,
+    decode: bool = False,
+):
+    """Returns (y, new_cache). Train: cache None -> None. Prefill: cache is an
+    empty dict -> filled. Decode: cache holds (k, v, length-mask info)."""
+    window = cfg.window if kind == "local" else None
+    theta = cfg.rope_theta_local if kind == "local" else cfg.rope_theta
+    q, k, v = _project_qkv(params, cfg, x, x)
+    cap = cfg.attn_logit_softcap
+    if kind == "bidir":  # whisper encoder: no rope (sinusoidal abs pos), no mask
+        return dense(params["wo"], bidirectional_attention(q, k, v, cap).reshape(*x.shape[:2], -1)), None
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+
+    if decode:
+        assert cache is not None
+        L = cache["k"].shape[1]
+        pos = positions[:, 0]  # (B,) current absolute position
+        # ring-buffer write for local layers, linear write for global ones.
+        # Local caches are built with L == min(window, max_len): L == window
+        # marks a ring buffer (pos can exceed L); L < window means the cache
+        # covers every position and plain indexing is correct.
+        is_ring = bool(window) and L == window
+        if is_ring:
+            slot = pos % window
+        else:
+            slot = pos
+        bidx = jnp.arange(x.shape[0])
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        idx = jnp.arange(L)[None, :]
+        if is_ring:
+            valid = idx < jnp.minimum(pos + 1, window)[:, None]
+        else:
+            valid = idx <= pos[:, None]
+        y = decode_attention(q, k_cache, v_cache, valid, cap)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        y = causal_attention(q, k, v, cfg, window=window, cap=cap)
+        new_cache = None
+        if cache is not None:  # prefill: write kv into the decode buffers
+            S = k.shape[1]
+            L = cache["k"].shape[1]
+            cdt = cache["k"].dtype
+            if window and window < S:
+                # keep the last `window` rows, ring-aligned so that decode's
+                # slot = pos % window lands on the right rows. (L == window)
+                rows = S - window + jnp.arange(window)
+                ring = rows % L
+                k_cache = cache["k"].at[:, ring].set(k[:, rows].astype(cdt))
+                v_cache = cache["v"].at[:, ring].set(v[:, rows].astype(cdt))
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cdt), 0, axis=1
+                )
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cdt), 0, axis=1
+                )
+            new_cache = {"k": k_cache, "v": v_cache}
+    return dense(params["wo"], y.reshape(*y.shape[:2], -1)), new_cache
+
+
+def cross_attention(params, cfg: ModelConfig, x, enc_kv: tuple):
+    """Decoder->encoder attention (whisper). enc_kv = (k, v) precomputed."""
+    dh = cfg.resolved_head_dim
+    B, Sq, _ = x.shape
+    q = dense(params["wq"], x).reshape(B, Sq, cfg.n_heads, dh)
+    k, v = enc_kv
+    y = bidirectional_attention(q, k, v, cfg.attn_logit_softcap)
+    return dense(params["wo"], y.reshape(B, Sq, -1))
+
+
+def encode_cross_kv(params, cfg: ModelConfig, enc_out):
+    dh = cfg.resolved_head_dim
+    B, Skv, _ = enc_out.shape
+    k = dense(params["wk"], enc_out).reshape(B, Skv, cfg.n_kv_heads, dh)
+    v = dense(params["wv"], enc_out).reshape(B, Skv, cfg.n_kv_heads, dh)
+    return k, v

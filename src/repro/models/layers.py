@@ -1,0 +1,118 @@
+"""Shared neural building blocks (pure-pytree, no framework dependency).
+
+Params are nested dicts of jnp arrays; every layer is a pair of functions
+``init_*(key, ...) -> params`` and ``apply(params, x, ...) -> y``. Compute
+runs in ``cfg.activation_dtype`` with f32 accumulation where it matters
+(norm statistics, softmax, losses); params live in ``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> dict:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return {"w": (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)}
+
+
+def dense(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> dict:
+    # std 1/sqrt(dim): with the gemma sqrt(d) embed_scale this gives unit-RMS
+    # residual-stream inputs AND O(1) logits through the tied readout.
+    scale = 1.0 / jnp.sqrt(dim)
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32) * scale).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Tied readout: x @ table^T. Callers chunk the sequence axis."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (gemma-style: weight is a residual offset from 1)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.zeros((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = dense(params["gate"], x)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return dense(params["down"], g * dense(params["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]  # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int, dtype) -> jax.Array:
+    """Whisper-style fixed positional embeddings for the encoder."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim * jnp.log(10000.0))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)

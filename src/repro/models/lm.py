@@ -1,0 +1,289 @@
+"""Top-level models: causal LM, encoder-decoder (whisper), VLM (internvl).
+
+Public API (all pure functions over param pytrees):
+  init_params(cfg, key)                          -> params
+  train_loss(params, cfg, batch)                 -> (loss, metrics)
+  prefill(params, cfg, batch)                    -> (last_logits, cache)
+  decode_step(params, cfg, tokens, pos, cache)   -> (logits, cache)
+  input_specs(cfg, shape)                        -> {name: ShapeDtypeStruct}
+
+Batches are dicts: tokens (B,S) int32, targets (B,S) int32, loss_mask (B,S);
+VLM adds patch_embeds (B, P, vit_dim); audio adds frames (B, F, D) — the
+modality frontends are stubbed per the brief (input_specs provides the
+precomputed embeddings, everything downstream is real).
+
+The CE loss is computed in sequence chunks against the (tied) embedding so
+(B, S, vocab) logits are never materialized (gemma3's 262k vocab at train_4k
+would be ~0.5 TB).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+    softcap,
+    unembed,
+)
+from repro.sharding.api import constrain
+
+
+def _adt(cfg):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, pdt),
+        "blocks": tfm.stack_init(ks[1], cfg, cross=cfg.is_encoder_decoder),
+        "final_norm": rmsnorm_init(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, pdt)
+    if cfg.is_encoder_decoder:
+        # encoder: frame embeddings (stub frontend) -> bidirectional stack
+        enc_cfg = _encoder_cfg(cfg)
+        params["enc_in"] = dense_init(ks[3], cfg.d_model, cfg.d_model, pdt)
+        params["encoder"] = tfm.stack_init(ks[4], enc_cfg)
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, pdt)
+    if cfg.vit_embed_dim:
+        # VLM projector: stubbed-ViT patch embeddings -> d_model (2-layer MLP)
+        params["proj_in"] = dense_init(ks[5], cfg.vit_embed_dim, cfg.d_model, pdt)
+        params["proj_norm"] = rmsnorm_init(cfg.d_model, pdt)
+        params["proj_out"] = dense_init(ks[6], cfg.d_model, cfg.d_model, pdt)
+    return params
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    # bidirectional full attention over the (short) frame axis
+    return dataclasses.replace(
+        cfg, n_layers=cfg.encoder_layers, layer_pattern=("bidir",), window=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# backbone forward (features before the unembed)
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over precomputed frame embeddings (B, F, D)."""
+    enc_cfg = _encoder_cfg(cfg)
+    x = dense(params["enc_in"], frames.astype(_adt(cfg)))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    # bidirectional: reuse the causal stack with window=0 and full attention
+    # over the (short) frame axis via the bidirectional path in cross-attn.
+    x, _, _ = tfm.stack_apply(params["encoder"], enc_cfg, x, pos)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Token (+patch) embedding. Returns (x, positions, text_offset)."""
+    x = embed(params["embed"], batch["tokens"], _adt(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    offset = 0
+    if cfg.vit_embed_dim and "patch_embeds" in batch:
+        p = dense(params["proj_in"], batch["patch_embeds"].astype(_adt(cfg)))
+        p = rmsnorm(params["proj_norm"], p, cfg.norm_eps)
+        p = dense(params["proj_out"], jax.nn.gelu(p, approximate=True))
+        x = jnp.concatenate([p, x], axis=1)
+        offset = p.shape[1]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions, offset
+
+
+def backbone(params, cfg: ModelConfig, batch, caches=None, decode=False, positions=None):
+    """Features (B, S, D) plus (new_caches, aux)."""
+    enc_out = None
+    if cfg.is_encoder_decoder and not decode:
+        enc_out = _encode(params, cfg, batch["frames"])
+    if decode:
+        x = embed(params["embed"], batch["tokens"], _adt(cfg))
+        if cfg.embed_scale:
+            x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    else:
+        x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", None, "embed"))
+    x, new_caches, aux = tfm.stack_apply(
+        params["blocks"], cfg, x, positions, caches, decode, enc_out
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def logits_fn(params, cfg: ModelConfig, feats):
+    out = unembed(params["embed"], feats) if cfg.tie_embeddings else dense(params["unembed"], feats)
+    return softcap(out, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# chunked CE loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce(params, cfg: ModelConfig, feats, targets, mask):
+    """Mean CE over masked positions; logits materialized one chunk at a time."""
+    B, S, D = feats.shape
+    c = min(cfg.loss_chunk, S)
+    if S % c:  # pad to a chunk multiple; padded rows are masked out
+        pad = c - S % c
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    n = S // c
+
+    def step(carry, xs):
+        f, t, m = xs  # (n-major slices): f (B,c,D)
+        f = constrain(f, ("batch", None, "embed"))
+        lg = constrain(logits_fn(params, cfg, f).astype(jnp.float32),
+                       ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tok = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        nll = (lse - tok) * m
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(m)), None
+
+    def split(a):
+        return a.reshape(B, n, c, *a.shape[2:]).swapaxes(0, 1)
+
+    # checkpoint the chunk body: backward recomputes the (B, c, V) logits
+    # chunk-by-chunk instead of keeping all n of them stacked (at gemma3's
+    # 262k vocab that's the difference between ~MBs and ~0.5 TB of residuals)
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(step), (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (split(feats), split(targets), split(mask.astype(jnp.float32))),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def backbone_features(params, cfg: ModelConfig, batch):
+    """Text-position features (B, S_text, D) + MoE aux — the Gauss-Newton cut
+    point: everything after this (the head) is convex in the features."""
+    feats, _, aux = backbone(params, cfg, batch)
+    if cfg.vit_embed_dim and "patch_embeds" in batch:
+        # features include the patch prefix; loss only on text positions
+        P = batch["patch_embeds"].shape[1]
+        feats = feats[:, P:]
+    return feats, aux
+
+
+def head_loss(params, cfg: ModelConfig, feats, batch):
+    """Convex head: chunked CE of the features against targets. ``params``
+    enters only through the (tied) readout; GN treats it as constant."""
+    tgt = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(tgt.shape, jnp.float32)
+    return chunked_ce(params, cfg, feats, tgt, mask)
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    feats, aux = backbone_features(params, cfg, batch)
+    loss = head_loss(params, cfg, feats, batch)
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_coef * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int | None = None):
+    """Run the full prompt, build the decode cache (sized for ``max_len``
+    total positions), return last-position logits."""
+    B, S = batch["tokens"].shape
+    caches = tfm.stack_cache_init(cfg, B, max_len or _cache_len(cfg, S))
+    # fill by running the training-path attention but persisting kv
+    enc_out = _encode(params, cfg, batch["frames"]) if cfg.is_encoder_decoder else None
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", None, "embed"))
+    x, new_caches, _ = tfm.stack_apply(
+        params["blocks"], cfg, x, positions, caches, False, enc_out
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, -1:])
+    return logits, new_caches
+
+
+def _cache_len(cfg: ModelConfig, S: int) -> int:
+    return S
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, kv_len: int):
+    """Abstract cache pytree for the dry-run serve_step."""
+    return jax.eval_shape(lambda: tfm.stack_cache_init(cfg, batch, kv_len))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, caches):
+    """One-token decode. tokens (B,1) int32; pos (B,) absolute positions."""
+    positions = pos[:, None]
+    batch = {"tokens": tokens}
+    feats, new_caches, _ = backbone(
+        params, cfg, batch, caches=caches, decode=True, positions=positions
+    )
+    return logits_fn(params, cfg, feats), new_caches
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S_text(cfg, S)), i32),
+            "targets": jax.ShapeDtypeStruct((B, S_text(cfg, S)), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S_text(cfg, S)), jnp.float32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S_text(cfg, S)), i32)}
+    else:  # decode
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32),
+        }
+    if cfg.vit_embed_dim and shape.kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.vit_embed_dim), jnp.dtype(cfg.activation_dtype)
+        )
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.activation_dtype)
+        )
+    return specs
+
+
+def S_text(cfg: ModelConfig, S: int) -> int:
+    """VLM: patch prefix + text tokens fill the assigned seq_len budget."""
+    if cfg.vit_embed_dim:
+        return S - cfg.n_patches
+    return S

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded scatter dispatch.
+
+Dispatch strategy (TPU-native adaptation, see DESIGN.md):
+  1. router logits -> top-k (expert, gate) per token;
+  2. slot index inside each expert via a cumulative-sum rank over the
+     flattened (token*k, E) one-hot — O(T*k*E) ints, tiny;
+  3. scatter tokens into a dense (E, capacity, D) buffer (drop on overflow),
+     run the expert FFNs as one batched einsum over the expert axis (MXU
+     friendly, shards cleanly over the mesh 'model'/'data' axes — GSPMD turns
+     the scatter/gather into the expert all-to-all),
+  4. gather back and combine with the gate weights.
+
+Processing is chunked over the sequence (cfg.moe_seq_chunk) so the dispatch
+buffer stays bounded at long context. The router aux (load-balance) loss
+follows Switch/Mixtral: E * sum_e f_e * p_e.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.api import constrain, current_rules
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(D)
+    s_out = 1.0 / jnp.sqrt(F)
+    return {
+        "router": dense_init(kr, D, E, jnp.float32),  # router stays f32
+        "gate": (jax.random.normal(kg, (E, D, F), jnp.float32) * s_in).astype(dtype),
+        "up": (jax.random.normal(ku, (E, D, F), jnp.float32) * s_in).astype(dtype),
+        "down": (jax.random.normal(kd, (E, F, D), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def _dispatch_chunk(params, cfg: ModelConfig, x, act: str):
+    """x: (T, D) flat tokens -> (y (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    # sub-expert split (expert-parallel when E doesn't divide the mesh axis):
+    # expert e's slots are dealt round-robin over `split` sub-buffers, each a
+    # full (D,F) copy of e's weights — dim0 of the dispatch buffer becomes
+    # E*split == lcm(E, mesh) and every matmul stays shard-local.
+    rules, _ = current_rules()
+    split = int(rules.get("_moe_split", 1)) if rules else 1
+    capacity = int(cfg.capacity_factor * T * K / E)
+    capacity = max(capacity, K * split)
+    capacity = -(-capacity // split) * split  # multiple of split
+
+    logits = (x.astype(jnp.float32) @ params["router"]["w"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux (Switch eq. 4): fraction routed vs mean router prob
+    onehot_top1_frac = jnp.mean(
+        jax.nn.one_hot(expert_idx.reshape(-1), E, dtype=jnp.float32), axis=0
+    )
+    aux = E * jnp.sum(onehot_top1_frac * jnp.mean(probs, axis=0))
+
+    # slot ranks: order assignments by (token, k) arrival within each expert
+    flat_e = expert_idx.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    ranks_all = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(ranks_all, flat_e[:, None], axis=1)[:, 0]  # (T*K,)
+    keep = slot < capacity
+
+    # scatter into (E*split, C/split, D)
+    x_dup = jnp.repeat(x, K, axis=0)  # (T*K, D)
+    sub = slot % split  # round-robin sub-expert assignment
+    sub_e = flat_e * split + sub
+    sub_slot = slot // split
+    sub_cap = capacity // split
+    buf = jnp.zeros((E * split, sub_cap, D), x.dtype)
+    safe_slot = jnp.where(keep, sub_slot, sub_cap - 1)
+    contrib = jnp.where(keep[:, None], x_dup, 0)
+    buf = buf.at[sub_e, safe_slot].add(contrib, mode="drop")
+    # expert-parallel pin: GSPMD turns the scatter/gather into the all-to-all
+    lead = "subexpert" if split > 1 else "expert"  # split==1 in production
+    buf = constrain(buf, (lead, "moe_cap", None))
+
+    # expert FFN (batched over E): gated MLP
+    def wrep(w):  # (E, D, F) -> (E*split, D, F): each sub-expert = full copy
+        w = w.astype(x.dtype)
+        return jnp.repeat(w, split, axis=0) if split > 1 else w
+
+    g = constrain(jnp.einsum("ecd,edf->ecf", buf, wrep(params["gate"])),
+                  (lead, "moe_cap", "expert_ffn"))
+    u = constrain(jnp.einsum("ecd,edf->ecf", buf, wrep(params["up"])),
+                  (lead, "moe_cap", "expert_ffn"))
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    out_buf = constrain(
+        jnp.einsum("ecf,efd->ecd", g * u, wrep(params["down"])),
+        (lead, "moe_cap", None))
+
+    # gather back + gate-combine
+    y_dup = out_buf[sub_e, safe_slot]  # (T*K, D)
+    y_dup = jnp.where(keep[:, None], y_dup, 0)
+    w = gate_vals.reshape(-1).astype(x.dtype)
+    y = jnp.sum((y_dup * w[:, None]).reshape(T, K, D), axis=1)
+    return y, aux
+
+
+def moe_ffn(params, cfg: ModelConfig, x, act: str = "silu"):
+    """x: (B, S, D) -> (y, aux). Chunked over the sequence axis."""
+    B, S, D = x.shape
+    chunk = min(cfg.moe_seq_chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3).reshape(n, B * chunk, D)
+
+    def step(_, xt):
+        y, aux = _dispatch_chunk(params, cfg, xt, act)
+        return None, (y, aux)
+
+    _, (yc, aux) = jax.lax.scan(step, None, xc)
+    y = yc.reshape(n, B, chunk, D).transpose(1, 0, 2, 3).reshape(B, S, D)
+    return y, jnp.mean(aux)

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Block = residual branch with:
+    linear_x -> temporal conv1d(width 4) -> RG-LRU   (recurrent path)
+    linear_y -> gelu                                  (gating path)
+    multiply -> linear_out
+
+RG-LRU recurrence (per channel, real-valued diagonal):
+    r_t = sigmoid(W_a x_t + b_a)                (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)      (decay in (0,1); c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill parallelizes over time with ``jax.lax.associative_scan`` on
+the affine elements (a, b) — the TPU-native answer to the paper-family's CUDA
+linear-scan kernels. Decode is the O(1) single-step update carrying h.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init
+from repro.sharding.api import constrain
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    kx, ky, ko, kc, ka, ki, kl = jax.random.split(key, 7)
+    # Lambda init so a^c spans ~(0.9, 0.999) (paper's stable range)
+    lam_raw = jax.random.uniform(kl, (W,), jnp.float32, 0.0, 1.0)
+    return {
+        "in_x": dense_init(kx, D, W, dtype),
+        "in_y": dense_init(ky, D, W, dtype),
+        "out": dense_init(ko, W, D, dtype),
+        "conv_w": (jax.random.normal(kc, (cfg.conv1d_width, W), jnp.float32) / cfg.conv1d_width).astype(dtype),
+        "gate_a": dense_init(ka, W, W, dtype),
+        "gate_i": dense_init(ki, W, W, dtype),
+        "lam": lam_raw,  # f32 raw; softplus'd in apply
+    }
+
+
+def _conv1d(w, x, state=None):
+    """Causal depthwise temporal conv. x (B,S,W); state (B,K-1,W) for decode."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else None
+    return out, new_state
+
+
+def _gates(params, xw):
+    r = jax.nn.sigmoid(dense(params["gate_a"], xw).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["gate_i"], xw).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B,S,W) f32
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xw.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_apply(params, cfg: ModelConfig, x, *, state=None, decode: bool = False):
+    """x (B,S,D). state = {'h': (B,W), 'conv': (B,K-1,W)} for decode.
+    Returns (y (B,S,D), new_state)."""
+    xw = constrain(dense(params["in_x"], x), ("batch", None, "state"))
+    gate = constrain(jax.nn.gelu(dense(params["in_y"], x), approximate=True),
+                     ("batch", None, "state"))
+
+    if decode:
+        conv_out, conv_state = _conv1d(params["conv_w"], xw, state["conv"])
+        a, gx = _gates(params, conv_out)
+        h = a[:, 0] * state["h"] + gx[:, 0]  # (B,W) f32
+        y = h[:, None, :]
+        new_state = {"h": h, "conv": conv_state}
+    else:
+        conv_out, _ = _conv1d(params["conv_w"], xw)
+        a, gx = _gates(params, conv_out)
+        a = constrain(a, ("batch", None, "state"))
+        gx = constrain(gx, ("batch", None, "state"))
+
+        # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b) pairs
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+        y = h
+        new_state = None
+        if state is not None:  # prefill: hand decode its carry
+            K = params["conv_w"].shape[0]
+            new_state = {"h": h[:, -1], "conv": xw[:, -(K - 1):].astype(jnp.float32)}
+
+    y = y.astype(x.dtype) * gate
+    return dense(params["out"], y), new_state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> dict:
+    W = cfg.lru_width or cfg.d_model
+    K = cfg.conv1d_width
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, W), jnp.float32),
+    }

@@ -1,0 +1,234 @@
+"""Block composer: pattern-stacked layers scanned over repeats.
+
+``cfg.layer_pattern`` (length G) repeats R = n_layers/G times. Params for
+each pattern position are stacked over R, and the forward pass is a single
+``lax.scan`` over repeats whose body applies the G distinct blocks — HLO size
+O(G), compile time independent of depth, remat applied per repeat.
+
+Block kinds and their cache/state pytrees:
+  'global'/'local' : self-attention + (MoE or dense) FFN; cache {k, v}
+  'rglru'          : RG-LRU mixer + dense FFN;            state {h, conv}
+  'mlstm'          : xLSTM matrix-memory block (no FFN);  state {C, n, m, conv}
+  'slstm'          : xLSTM scalar block + dense FFN;      state {h, c, n, m}
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent, xlstm
+from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.sharding.api import constrain
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+def _param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+ATTN_KINDS = ("global", "local", "bidir")
+
+
+def block_init(key, cfg: ModelConfig, kind: str, *, cross: bool = False) -> dict:
+    dtype = _param_dtype(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"norm1": rmsnorm_init(D, dtype)}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+        p["norm2"] = rmsnorm_init(D, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[1], D, cfg.d_ff, dtype)
+        if cross:
+            p["norm_x"] = rmsnorm_init(D, dtype)
+            p["cross"] = attn.attn_init(ks[2], cfg, dtype, cross=True)
+    elif kind == "rglru":
+        p["rglru"] = recurrent.rglru_init(ks[0], cfg, dtype)
+        p["norm2"] = rmsnorm_init(D, dtype)
+        p["ffn"] = mlp_init(ks[1], D, cfg.d_ff, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg, dtype)
+        p["norm2"] = rmsnorm_init(D, dtype)
+        p["ffn"] = mlp_init(ks[1], D, int(cfg.slstm_ffn_factor * D), dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Decode-time cache/state for one block."""
+    dh = cfg.resolved_head_dim
+    if kind in ATTN_KINDS:
+        L = min(cfg.window, max_len) if (kind == "local" and cfg.window) else max_len
+        shape = (batch, L, cfg.n_kv_heads, dh)
+        c = {"k": jnp.zeros(shape, _act_dtype(cfg)), "v": jnp.zeros(shape, _act_dtype(cfg))}
+        if cfg.is_encoder_decoder:  # cross-attention KV, precomputed at prefill
+            xshape = (batch, cfg.encoder_seq, cfg.n_kv_heads, dh)
+            c["xk"] = jnp.zeros(xshape, _act_dtype(cfg))
+            c["xv"] = jnp.zeros(xshape, _act_dtype(cfg))
+        return c
+    if kind == "rglru":
+        return recurrent.rglru_init_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_apply(
+    params: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x,
+    positions,
+    cache=None,
+    decode: bool = False,
+    enc_out=None,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        cross_kv = None
+        self_cache = cache
+        if cache is not None and "xk" in cache:
+            cross_kv = (cache["xk"], cache["xv"])
+            self_cache = {"k": cache["k"], "v": cache["v"]}
+        y, new_cache = attn.self_attention(params["attn"], cfg, h, kind, positions, self_cache, decode)
+        if "cross" in params:
+            x = x + y
+            hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+            if decode:
+                enc_kv = cross_kv  # precomputed at prefill
+            else:
+                enc_kv = attn.encode_cross_kv(params["cross"], cfg, enc_out)
+            y = attn.cross_attention(params["cross"], cfg, hx, enc_kv)
+            if new_cache is not None:  # persist cross kv for decode
+                new_cache = dict(new_cache, xk=enc_kv[0], xv=enc_kv[1])
+        elif cross_kv is not None and new_cache is not None:
+            new_cache = dict(new_cache, xk=cross_kv[0], xv=cross_kv[1])
+        x = x + y
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y2, aux = moe_mod.moe_ffn(params["moe"], cfg, h2, cfg.mlp_act)
+        else:
+            y2 = mlp(params["ffn"], h2, cfg.mlp_act)
+        x = x + y2
+    elif kind == "rglru":
+        y, new_cache = recurrent.rglru_apply(params["rglru"], cfg, h, state=cache, decode=decode)
+        x = x + y
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp(params["ffn"], h2, cfg.mlp_act)
+    elif kind == "mlstm":
+        y, new_cache = xlstm.mlstm_apply(params["mlstm"], cfg, h, state=cache, decode=decode)
+        x = x + y
+    elif kind == "slstm":
+        y, new_cache = xlstm.slstm_apply(params["slstm"], cfg, h, state=cache, decode=decode)
+        x = x + y
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp(params["ffn"], h2, cfg.mlp_act)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# pattern stack
+# ---------------------------------------------------------------------------
+
+
+def stack_init(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    """{'scan': per-pattern-position params stacked over R repeats,
+    'tail': unrolled params for the n_layers % G remainder layers}."""
+    R = cfg.pattern_repeats
+    scan_params = []
+    for p, kind in enumerate(cfg.layer_pattern):
+        keys = jax.random.split(jax.random.fold_in(key, p), R)
+        stacked = jax.vmap(lambda k: block_init(k, cfg, kind, cross=cross))(keys)
+        scan_params.append(stacked)
+    tail = [
+        block_init(jax.random.fold_in(key, 1000 + t), cfg, cfg.layer_pattern[t], cross=cross)
+        for t in range(cfg.tail_len)
+    ]
+    return {"scan": scan_params, "tail": tail}
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    R = cfg.pattern_repeats
+    scan_caches = [
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (R, *a.shape)).copy(),
+                     block_cache_init(cfg, kind, batch, max_len))
+        for kind in cfg.layer_pattern
+    ]
+    tail = [
+        block_cache_init(cfg, cfg.layer_pattern[t], batch, max_len)
+        for t in range(cfg.tail_len)
+    ]
+    return {"scan": scan_caches, "tail": tail}
+
+
+def stack_apply(
+    stacked: dict,
+    cfg: ModelConfig,
+    x,
+    positions,
+    caches: dict | None = None,
+    decode: bool = False,
+    enc_out=None,
+):
+    """Scan over repeats, then the unrolled tail. Returns (x, caches, aux)."""
+
+    def body(h, per_repeat):
+        params_r, caches_r = per_repeat
+        h = constrain(h, ("batch", None, "embed"))
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_caches_r = []
+        for p, kind in enumerate(cfg.layer_pattern):
+            c = None if caches_r is None else caches_r[p]
+            h, nc, aux = block_apply(
+                params_r[p], cfg, kind, h, positions, c, decode, enc_out
+            )
+            new_caches_r.append(nc)
+            aux_tot = aux_tot + aux
+        if caches_r is None:
+            return h, aux_tot
+        return h, (new_caches_r, aux_tot)
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    scan_caches = None if caches is None else caches["scan"]
+    if scan_caches is None:
+        x, aux = jax.lax.scan(body, x, (stacked["scan"], None))
+        new_scan_caches, aux_total = None, jnp.sum(aux)
+    else:
+        x, (new_scan_caches, aux) = jax.lax.scan(body, x, (stacked["scan"], scan_caches))
+        aux_total = jnp.sum(aux)
+
+    new_tail = []
+    for t, params_t in enumerate(stacked["tail"]):
+        kind = cfg.layer_pattern[t]
+        c = None if caches is None else caches["tail"][t]
+        x, nc, aux = block_apply(params_t, cfg, kind, x, positions, c, decode, enc_out)
+        new_tail.append(nc)
+        aux_total = aux_total + aux
+
+    if caches is None:
+        return x, None, aux_total
+    return x, {"scan": new_scan_caches, "tail": new_tail}, aux_total

@@ -1,0 +1,273 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM per head carries a matrix state C (Dh x Dv), normalizer n (Dh) and a
+log-space stabilizer m:
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+
+with exponential input gate i = exp(i~) and sigmoid forget gate. Training and
+prefill use the CHUNKWISE-PARALLEL form (the TPU-native adaptation of the
+paper's fused CUDA kernel): an outer ``lax.scan`` carries (C, n, m) across
+chunks while each chunk computes an (L x L) decay-masked intra-chunk
+attention on the MXU — O(S/L) sequential steps instead of O(S).
+
+sLSTM is inherently sequential (memory mixing through the block-diagonal
+recurrent matrix R forbids parallelization — the paper says as much), so it
+runs as a time-step ``lax.scan``; the assigned xlstm-350m config uses it in
+1 of every 8 blocks, mirroring the paper's sparing use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.models.recurrent import _conv1d
+from repro.sharding.api import constrain
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    P = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    dh = P // H
+    ks = jax.random.split(key, 10)
+    return {
+        "up_l": dense_init(ks[0], D, P, dtype),
+        "up_r": dense_init(ks[1], D, P, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, P), jnp.float32) / cfg.conv1d_width).astype(dtype),
+        "wq": dense_init(ks[3], P, P, dtype),
+        "wk": dense_init(ks[4], P, P, dtype),
+        "wv": dense_init(ks[5], P, P, dtype),
+        "w_i": dense_init(ks[6], P, H, jnp.float32),  # gate projections in f32
+        "w_f": dense_init(ks[7], P, H, jnp.float32),
+        "hnorm": rmsnorm_init(dh, dtype),
+        "down": dense_init(ks[8], P, D, dtype),
+    }
+
+
+def _mlstm_chunk(carry, inp, dh):
+    """One chunk step. carry: C (B,H,dh,dh) f32, n (B,H,dh), m (B,H).
+    inp: q,k,v (B,L,H,dh), li/lf (B,L,H) f32 (log input / log forget)."""
+    C, n, m = carry
+    C = constrain(C, ("batch", "heads", "mlstm_dh", None))
+    q, k, v, li, lf = inp
+    B, L, H, _ = q.shape
+    # q/k/v stay in activation dtype (bf16): the einsums below accumulate in
+    # f32 on the MXU (preferred_element_type) — explicit f32 copies of the
+    # (B,S,H,dh) streams were the dominant HBM-traffic term (§Perf pair C).
+    qf, kf, vf = q, k, v
+
+    b = jnp.cumsum(lf, axis=1)  # (B,L,H) inclusive log-decay within chunk
+    btot = b[:, -1]  # (B,H)
+
+    # per-position stabilizer: m*_t = max(b_t + m, max_{s<=t}(b_t - b_s + li_s))
+    g = li - b  # (B,L,H): log(i_s) - b_s
+    gmax = jax.lax.cummax(g, axis=1)
+    m_star = jnp.maximum(b + m[:, None], b + gmax)  # (B,L,H)
+
+    # inter-chunk contribution: exp(b_t + m - m*_t) q_t^T C
+    w_inter = jnp.exp(b + m[:, None] - m_star)  # (B,L,H)
+    inter = jnp.einsum("blh,blhd,bhde->blhe", w_inter, qf, C,
+                       preferred_element_type=jnp.float32)
+    inter_den = jnp.einsum("blh,blhd,bhd->blh", w_inter, qf, n,
+                           preferred_element_type=jnp.float32)
+
+    # intra-chunk decay-masked attention
+    # weight(t,s) = exp(b_t - b_s + li_s - m*_t) for s <= t
+    logw = b[:, :, None] - b[:, None, :] + li[:, None, :] - m_star[:, :, None]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w_intra = jnp.where(mask[None, :, :, None], jnp.exp(logw), 0.0)  # (B,L,L,H)
+    scores = jnp.einsum("blhd,bshd->blsh", qf, kf,
+                        preferred_element_type=jnp.float32)
+    aw = w_intra * scores
+    intra = jnp.einsum("blsh,bshe->blhe", aw.astype(v.dtype), vf,
+                       preferred_element_type=jnp.float32)
+    intra_den = jnp.sum(aw, axis=2)  # (B,L,H)
+
+    num = inter + intra
+    den = inter_den + intra_den
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_star))[..., None]
+
+    # state update to end of chunk
+    m_new = jnp.maximum(m + btot, jnp.max(btot[:, None] - b + li, axis=1))
+    wk = jnp.exp(btot[:, None] - b + li - m_new[:, None])  # (B,L,H)
+    C_new = jnp.exp(m + btot - m_new)[..., None, None] * C + jnp.einsum(
+        "blh,blhd,blhe->bhde", wk.astype(k.dtype), kf, vf,
+        preferred_element_type=jnp.float32,
+    )
+    n_new = jnp.exp(m + btot - m_new)[..., None] * n + jnp.einsum(
+        "blh,blhd->bhd", wk.astype(k.dtype), kf,
+        preferred_element_type=jnp.float32)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_apply(params, cfg: ModelConfig, x, *, state=None, decode: bool = False):
+    """x (B,S,D) -> (y, new_state). state = {C, n, m, conv}."""
+    B, S, D = x.shape
+    P = params["up_l"]["w"].shape[1]
+    H = cfg.n_heads
+    dh = P // H
+    left = constrain(dense(params["up_l"], x), ("batch", None, "mlstm_proj"))
+    right = constrain(dense(params["up_r"], x), ("batch", None, "mlstm_proj"))
+
+    conv_in = left
+    if decode:
+        conv_out, conv_state = _conv1d(params["conv_w"], conv_in, state["conv"])
+    else:
+        conv_out, _ = _conv1d(params["conv_w"], conv_in)
+        conv_state = conv_in[:, -(params["conv_w"].shape[0] - 1):].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+
+    q = constrain(dense(params["wq"], conv_out).reshape(B, S, H, dh),
+                  ("batch", None, "heads", "mlstm_dh"))
+    k = constrain(dense(params["wk"], conv_out).reshape(B, S, H, dh),
+                  ("batch", None, "heads", "mlstm_dh")) / jnp.sqrt(dh).astype(x.dtype)
+    v = constrain(dense(params["wv"], left).reshape(B, S, H, dh),
+                  ("batch", None, "heads", "mlstm_dh"))
+    li = (conv_out.astype(jnp.float32) @ params["w_i"]["w"])  # (B,S,H) log input gate
+    lf = jax.nn.log_sigmoid(conv_out.astype(jnp.float32) @ params["w_f"]["w"])
+
+    if decode:
+        (C, n, m), h = _mlstm_chunk((state["C"], state["n"], state["m"]), (q, k, v, li, lf), dh)
+        new_state = {"C": C, "n": n, "m": m, "conv": conv_state}
+    else:
+        L = min(CHUNK, S)
+        assert S % L == 0
+        nc = S // L
+
+        def split(t):
+            return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+        xs = tuple(map(split, (q, k, v, li, lf)))
+        xs = tuple(
+            constrain(t, (None, "batch", None, "heads", "mlstm_dh")[: t.ndim])
+            for t in xs
+        )
+        C0 = constrain(jnp.zeros((B, H, dh, dh), jnp.float32),
+                       ("batch", "heads", "mlstm_dh", None))
+        n0 = constrain(jnp.zeros((B, H, dh), jnp.float32),
+                       ("batch", "heads", "mlstm_dh"))
+        m0 = jnp.zeros((B, H), jnp.float32)
+        (C, n, m), hs = jax.lax.scan(
+            lambda c, i: _mlstm_chunk(c, i, dh), (C0, n0, m0), xs
+        )
+        h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+        new_state = {"C": C, "n": n, "m": m, "conv": conv_state} if state is not None else None
+
+    h = rmsnorm(params["hnorm"], h.astype(x.dtype), cfg.norm_eps).reshape(B, S, P)
+    y = h * jax.nn.silu(right)
+    return dense(params["down"], y), new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    P = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = P // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, P), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    w = D // H  # per-head width (block-diagonal recurrence)
+    ks = jax.random.split(key, 7)
+    scale = 1.0 / jnp.sqrt(D)
+    rscale = 1.0 / jnp.sqrt(w)
+
+    def wmat(k):
+        return (jax.random.normal(k, (D, 4 * D), jnp.float32) * scale).astype(dtype)
+
+    return {
+        "wx": {"w": wmat(ks[0])},  # input projections for (i, f, z, o) stacked
+        "r": (jax.random.normal(ks[1], (H, w, 4 * w), jnp.float32) * rscale).astype(dtype),
+        "bias": jnp.zeros((4 * D,), jnp.float32),
+        "hnorm": rmsnorm_init(D, dtype),
+        "down": dense_init(ks[2], D, D, dtype),
+    }
+
+
+def _slstm_cell(params, cfg, xt4, hcnm):
+    """One time step. xt4 (B,4D) precomputed x-projection; carry (h,c,n,m)."""
+    h, c, n, m = hcnm
+    B, D = h.shape
+    H = cfg.n_heads
+    w = D // H
+    rh = jnp.einsum("bhw,hwf->bhf", h.reshape(B, H, w).astype(params["r"].dtype),
+                    params["r"], preferred_element_type=jnp.float32).reshape(B, 4 * D)
+    pre = xt4.astype(jnp.float32) + rh + params["bias"]
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_apply(params, cfg: ModelConfig, x, *, state=None, decode: bool = False):
+    """x (B,S,D) -> (y, new_state). state = {h, c, n, m} each (B,D) f32."""
+    B, S, D = x.shape
+    x4 = constrain(dense(params["wx"], x), ("batch", None, "gates4"))  # (B,S,4D)
+    if state is None:
+        zeros = jnp.zeros((B, D), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    if decode:
+        h, c, n, m = _slstm_cell(params, cfg, x4[:, 0], carry)
+        hs = h[:, None]
+        new_state = {"h": h, "c": c, "n": n, "m": m}
+    elif cfg.use_pallas:
+        # fused Pallas recurrence: (h,c,n,m) stay VMEM-resident across a whole
+        # time block instead of round-tripping HBM every step (§Perf pair C).
+        # Forward/serving paths only (the kernel defines no VJP).
+        from repro.kernels.slstm_scan import ops as slstm_ops
+
+        hs, (h, c, n, m) = slstm_ops.slstm_scan(
+            x4, params["r"], params["bias"], carry,
+            interpret=jax.default_backend() != "tpu",
+        )
+        new_state = {"h": h, "c": c, "n": n, "m": m} if state is not None else None
+    else:
+        def step(cr, xt):
+            h, c, n, m = _slstm_cell(params, cfg, xt, cr)
+            h = constrain(h, ("batch", "state"))
+            c = constrain(c, ("batch", "state"))
+            return (h, c, n, m), h
+
+        (h, c, n, m), hs = jax.lax.scan(step, carry, x4.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)  # (B,S,D)
+        new_state = {"h": h, "c": c, "n": n, "m": m} if state is not None else None
+
+    y = rmsnorm(params["hnorm"], hs.astype(x.dtype), cfg.norm_eps)
+    return dense(params["down"], y), new_state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}

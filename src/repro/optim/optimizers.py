@@ -1,0 +1,85 @@
+"""First-order optimizers (optax-like, dependency-free).
+
+These power the FedGD baseline at LM scale (the paper's first-order
+comparison point) and give the examples a familiar AdamW reference. Same
+(init, update) contract as optax so they compose with the train loop:
+
+    opt = adamw(3e-4)
+    opt_state = opt.init(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params)}
+        return {}
+
+    def update(grads, state, params=None):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return -lr * upd
+
+        return jax.tree.map(u, m, v, params), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree)

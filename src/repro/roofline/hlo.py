@@ -1,0 +1,93 @@
+"""Collective-byte accounting from post-SPMD HLO text.
+
+``compiled.as_text()`` is the per-device program after the GSPMD partitioner,
+so operand shapes are already per-chip. We sum the bytes moved by every
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+instruction: for all-gather the *output* is the wire payload (each chip
+receives the gathered result), for the others the operand(s). Tuple-shaped
+collectives (grouped all-reduces) contribute every element.
+
+This is the 'collective_bytes' input to the roofline's third term. It is a
+bandwidth proxy, not a latency model — good enough to rank sharding choices
+and to hillclimb (§Perf), which only needs the metric to be consistent.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-reduce.5 = (f32[128], f32[256]) all-reduce(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {'total': bytes, per-op-kind breakdown, 'count': #instrs}.
+
+    -start/-done pairs are counted once (on -start; -done carries the same
+    shape but moves no new bytes)."""
+    per_op = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: bytes already counted at -start
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        per_op[op] += _shape_bytes(shape_text)
+        count += 1
+    out = dict(per_op)
+    out["total"] = sum(per_op.values())
+    out["count"] = count
+    return out
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "all-reduce", "all-gather",
+                                     "reduce-scatter", "all-to-all",
+                                     "collective-permute", "custom-call",
+                                     "dot", "convolution", "scatter", "gather",
+                                     "while", "transpose", "reshape")) -> dict:
+    """Cheap HLO profile for the perf loop: instruction counts by kind."""
+    hist = {}
+    for op in ops:
+        # opcode position: `... = <shape> <op>(operands...)`
+        hist[op] = len(re.findall(rf"\s{re.escape(op)}\(", hlo_text))
+    return hist

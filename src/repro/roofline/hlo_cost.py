@@ -1,0 +1,320 @@
+"""Loop-aware HLO cost analysis (flops / HBM traffic / collective bytes).
+
+XLA's built-in ``compiled.cost_analysis()`` counts every while-loop body
+exactly once (measured: a 10-iteration scan of a matmul reports one matmul).
+Our programs are loop-dominated — scan over layer repeats × CG fori-loop ×
+attention/CE chunk scans — so the built-in numbers undercount by 10-100×.
+
+This module re-derives the three roofline inputs from ``compiled.as_text()``
+(the post-SPMD, per-device program) with loop multipliers taken from the
+``known_trip_count`` backend_config XLA attaches to rolled loops:
+
+  * flops             — 2·numel(out)·K for every dot (K = contracting size),
+                        + numel(out) for every other compute op (minor term),
+                        recursing into fusions/called computations, ×trip
+                        counts through while bodies.
+  * bytes             — HBM traffic proxy: operands + results of every
+                        *top-level* op in each executed computation. Fusion
+                        interiors stay in registers/VMEM, so fusions are
+                        costed at their call-site boundary only.
+  * collective_bytes  — wire payload of all-gather/all-reduce/reduce-scatter/
+                        all-to-all/collective-permute, × trip counts.
+
+Unknown trip counts default to 1 (and are reported so the caller can see
+unmodeled dynamism). This is an estimator with documented conventions, not a
+simulator — its job is to rank sharding/blocking alternatives consistently
+(§Perf) and to feed the three-term roofline with sane magnitudes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([\w\-]+)\((.*)$"
+)
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "while", "conditional", "call", "after-all", "copy-start",
+               "copy-done"}
+
+
+def _shape_numel_bytes(text: str):
+    numel, nbytes = 0, 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return numel, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # operands + attrs tail of the line
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict  # name -> shape text
+    instrs: list
+
+
+def parse_module(text: str) -> dict:
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                params = {}
+                for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))", m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), params, [])
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(Instr(im.group(1), im.group(2), im.group(3), im.group(4)))
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    bytes_by_op: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] += mult * v
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] += mult * v
+        self.unknown_loops += other.unknown_loops
+
+    def charge(self, op: str, nbytes: float):
+        self.bytes += nbytes
+        self.bytes_by_op[op] += nbytes
+
+
+def _dot_flops(instr: Instr, symbols: dict) -> float:
+    out_numel, _ = _shape_numel_bytes(instr.shape)
+    # K = product of lhs contracting dims
+    cm = _CONTRACT_RE.search(instr.rest)
+    ops = _OPERAND_RE.findall(instr.rest.split(")", 1)[0])
+    k = 1
+    if cm and ops:
+        lhs_shape = symbols.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_numel * k
+
+
+def _cost_of(comp_name: str, comps: dict, cache: dict) -> Cost:
+    if comp_name in cache:
+        return cache[comp_name]
+    comp = comps.get(comp_name)
+    total = Cost()
+    if comp is None:
+        cache[comp_name] = total
+        return total
+    symbols = dict(comp.params)
+    for ins in comp.instrs:
+        symbols[ins.name] = ins.shape
+    for ins in comp.instrs:
+        numel, nbytes = _shape_numel_bytes(ins.shape)
+        op = ins.op
+        if op == "while":
+            tm = _TRIP_RE.search(ins.rest)
+            trips = int(tm.group(1)) if tm else 1
+            if not tm:
+                total.unknown_loops += 1
+            bm = _CALLS_RE.search(ins.rest)
+            if bm:
+                total.add(_cost_of(bm.group(1), comps, cache), trips)
+            cm = _COND_RE.search(ins.rest)
+            if cm:
+                total.add(_cost_of(cm.group(1), comps, cache), trips + 1)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for cm in _CALLS_RE.finditer(ins.rest):
+                total.add(_cost_of(cm.group(1), comps, cache))
+            continue
+        if op == "fusion":
+            # flops from the interior; bytes at the call boundary only
+            bm = _CALLS_RE.search(ins.rest)
+            called = None
+            if bm:
+                inner = _cost_of(bm.group(1), comps, cache)
+                total.flops += inner.flops
+                total.coll_bytes += inner.coll_bytes
+                called = comps.get(bm.group(1))
+            operand_bytes = _fusion_boundary_bytes(ins, symbols, called)
+            total.charge("fusion", nbytes + operand_bytes)
+            continue
+        if op in COLLECTIVES or any(op == c + sfx for c in COLLECTIVES for sfx in ("-start",)):
+            base = op.replace("-start", "")
+            payload = nbytes if base == "all-gather" else _operand_bytes(ins, symbols)
+            total.coll_bytes += payload
+            total.coll_by_op[base] += payload
+            total.charge(base, nbytes + _operand_bytes(ins, symbols))
+            continue
+        if op.endswith("-done") or op in _SKIP_BYTES:
+            continue
+        if op in ("dot", "convolution"):
+            total.flops += _dot_flops(ins, symbols)
+        else:
+            total.flops += numel  # elementwise/reduce minor term
+        # HBM traffic conventions: windowed reads/writes touch only the
+        # window, not the full backing buffer (a dynamic-slice inside a loop
+        # body would otherwise be charged the whole stacked operand per
+        # iteration — measured 600x overcount on scan-heavy models).
+        if op in ("dynamic-slice", "gather"):
+            total.charge(op, 2 * nbytes)  # window read + result write
+        elif op in ("dynamic-update-slice", "scatter"):
+            upd = _update_operand_bytes(ins, symbols, op)
+            total.charge(op, 2 * upd)  # update read + window write
+        else:
+            total.charge(op, nbytes + _operand_bytes(ins, symbols))
+    # fusion interiors contribute flops when called; standalone computations
+    cache[comp_name] = total
+    return total
+
+
+def _fusion_boundary_bytes(ins: Instr, symbols: dict, called) -> float:
+    """Bytes read at a fusion's boundary. A loop body that dynamic-slices a
+    stacked scan input only touches the window, not the whole buffer —
+    charging the full operand every iteration overcounted scan-heavy models
+    ~600x. Operands whose interior consumers are all windowed reads
+    (dynamic-slice / gather / dynamic-update-slice) are charged at the
+    windows' sizes instead of the full tensor."""
+    head = ins.rest.split(")", 1)[0]
+    operand_names = _OPERAND_RE.findall(head)
+    if called is None:
+        out = 0.0
+        for name in operand_names:
+            shp = symbols.get(name)
+            if shp:
+                out += _shape_numel_bytes(shp)[1]
+        return out
+
+    param_names = list(called.params)
+    # windowed-read bytes per interior param: param -> sum of slice results
+    windowed: dict = {}
+    full_use: set = set()
+    for inner in called.instrs:
+        ihead = inner.rest.split(")", 1)[0]
+        refs = set(_OPERAND_RE.findall(ihead))
+        for pn in param_names:
+            if pn not in refs:
+                continue
+            if inner.op in ("dynamic-slice", "gather"):
+                windowed[pn] = windowed.get(pn, 0.0) + _shape_numel_bytes(inner.shape)[1]
+            elif inner.op == "dynamic-update-slice":
+                ops_in = _OPERAND_RE.findall(ihead)
+                upd = ops_in[1] if len(ops_in) > 1 else None
+                upd_shape = called.params.get(upd) or ""
+                for i2 in called.instrs:
+                    if i2.name == upd:
+                        upd_shape = i2.shape
+                        break
+                windowed[pn] = windowed.get(pn, 0.0) + _shape_numel_bytes(upd_shape)[1]
+            else:
+                full_use.add(pn)
+    out = 0.0
+    for i, name in enumerate(operand_names):
+        shp = symbols.get(name)
+        if not shp:
+            continue
+        nbytes = _shape_numel_bytes(shp)[1]
+        pn = param_names[i] if i < len(param_names) else None
+        if pn is not None and pn not in full_use and pn in windowed:
+            out += min(windowed[pn], nbytes)
+        else:
+            out += nbytes
+    return out
+
+
+def _update_operand_bytes(ins: Instr, symbols: dict, op: str) -> float:
+    """Bytes of the update operand: index 1 for dynamic-update-slice,
+    index 2 for scatter; falls back to the result size."""
+    head = ins.rest.split(")", 1)[0]
+    ops = _OPERAND_RE.findall(head)
+    idx = 1 if op == "dynamic-update-slice" else 2
+    if len(ops) > idx and ops[idx] in symbols:
+        return _shape_numel_bytes(symbols[ops[idx]])[1]
+    return _shape_numel_bytes(ins.shape)[1]
+
+
+def _operand_bytes(ins: Instr, symbols: dict) -> float:
+    head = ins.rest.split(")", 1)[0]
+    out = 0.0
+    for name in _OPERAND_RE.findall(head):
+        shp = symbols.get(name)
+        if shp:
+            out += _shape_numel_bytes(shp)[1]
+    return out
+
+
+def analyze(hlo_text: str) -> dict:
+    """Loop-aware {flops, bytes, collective_bytes, coll_by_op, unknown_loops}
+    for the ENTRY computation of a post-SPMD per-device HLO module."""
+    comps = parse_module(hlo_text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        raise ValueError("no ENTRY computation found")
+    # fusions' interior flops are added at call sites; drop double counting by
+    # costing only computations reachable from ENTRY via the recursion.
+    cost = _cost_of(entry, comps, {})
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.coll_bytes,
+        "coll_by_op": dict(cost.coll_by_op),
+        "bytes_by_op": dict(cost.bytes_by_op),
+        "unknown_loops": cost.unknown_loops,
+    }

@@ -1,0 +1,307 @@
+"""Partition-spec rules: map every state/batch pytree onto the mesh.
+
+The policy is greedy size-based tensor sharding (DESIGN.md §5):
+
+  * params — assign the 'model' axis to the largest divisible dim, then an
+    FSDP 'data' assignment to the largest remaining divisible dim. Stacked
+    scan params carry a leading repeat axis R which is never sharded.
+  * per-client FedNew state (g_i, lam_i, y_i) — a leading client axis sharded
+    over ``fed.client_axes``; the per-client payload reuses the param rule on
+    the axes the clients don't occupy.
+  * batches — leading client axis over client axes, per-client batch over the
+    leftover non-'model' axes.
+  * decode caches — batch dim over the data-like axes when divisible,
+    otherwise the KV-length dim over ('data','model') (the long_500k case:
+    one sequence spread over the whole pod, flash-decode style).
+
+Everything returns ``NamedSharding`` pytrees ready to pass as jit
+in_shardings, computed from abstract ``jax.eval_shape`` trees — no
+allocation, safe for the 512-device dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# axis bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_client_axes(cfg: ModelConfig, mesh: Mesh) -> tuple:
+    """Intersect the config's preferred client axes with the mesh. An arch
+    that federates over 'pod' degenerates to a single client on a single-pod
+    mesh (n=1 FedNew is plain damped Newton — still well-defined).
+
+    On a multi-pod mesh, 'data'-federated archs promote to ('pod', 'data'):
+    each pod hosts its own cohort of clients and the only traffic crossing
+    the pod links is the eq.-13 all-reduce. (This also keeps the shard_map
+    manual region's auto axes == {'model'}, the only partial-manual layout
+    XLA's SPMD partitioner currently handles without the b/433785288-family
+    grouping CHECK crash — see EXPERIMENTS.md §Perf iteration 4.)"""
+    axes = tuple(a for a in cfg.fed.client_axes if a in mesh.axis_names)
+    if axes == ("data",) and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return axes
+
+
+def n_clients(cfg: ModelConfig, mesh: Mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    out = 1
+    for a in resolve_client_axes(cfg, mesh):
+        out *= sizes[a]
+    return out
+
+
+def data_axes(mesh: Mesh, exclude: Sequence[str] = ()) -> tuple:
+    """Batch-parallel axes: everything except 'model' and ``exclude``."""
+    return tuple(a for a in mesh.axis_names if a != "model" and a not in exclude)
+
+
+# ---------------------------------------------------------------------------
+# greedy param rule
+# ---------------------------------------------------------------------------
+
+
+def leaf_spec(shape, sizes: dict, order: Sequence[str], skip_leading: int = 0) -> P:
+    """Assign each axis in ``order`` (e.g. ('model','data')) to the largest
+    still-unassigned dim it divides. Dims < the axis size are never sharded."""
+    ndim = len(shape)
+    assign = [None] * ndim
+    free = list(range(skip_leading, ndim))
+    for ax in order:
+        n = sizes[ax]
+        cands = [i for i in free if shape[i] % n == 0 and shape[i] >= n]
+        if not cands:
+            continue
+        best = max(cands, key=lambda i: shape[i])
+        assign[best] = ax
+        free.remove(best)
+    return P(*assign)
+
+
+def _is_scan_leaf(path) -> bool:
+    """Stacked per-repeat params/caches live under a 'scan' dict key."""
+    return any(
+        isinstance(k, jax.tree_util.DictKey) and k.key == "scan" for k in path
+    )
+
+
+def param_specs(
+    tree, mesh: Mesh, order: Sequence[str] = ("model", "data"),
+    prefer_model_sizes: tuple = (),
+):
+    """PartitionSpec tree for a param(-shaped) pytree. ``prefer_model_sizes``:
+    dim sizes (e.g. n_experts) that take 'model' ahead of the greedy
+    largest-dim rule — expert-parallel weights must match the e-sharded
+    dispatch buffer or every MoE einsum reshards."""
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        skip = 1 if _is_scan_leaf(path) else 0
+        pref = next(
+            (i for i in range(skip, leaf.ndim)
+             if leaf.shape[i] in prefer_model_sizes and leaf.shape[i] % m == 0
+             and m > 1),
+            None,
+        )
+        if pref is not None:
+            rest = leaf_spec(
+                tuple(1 if i == pref else d for i, d in enumerate(leaf.shape)),
+                sizes, tuple(a for a in order if a != "model"),
+                skip_leading=skip,
+            )
+            axes = list(rest)
+            axes[pref] = "model"
+            return P(*axes)
+        return leaf_spec(leaf.shape, sizes, order, skip_leading=skip)
+
+    return jax.tree_util.tree_map_with_path(rule, tree)
+
+
+def prepend_axes(spec_tree, axes: tuple):
+    """Per-client trees: prefix the client mesh axes as the leading dim."""
+    lead = axes if len(axes) != 1 else axes[0]
+    return jax.tree.map(
+        lambda s: P(lead, *s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation rules (logical-name -> mesh axes, divisibility-checked)
+# ---------------------------------------------------------------------------
+
+
+def activation_rules(
+    cfg: ModelConfig, mesh: Mesh, *, client_axes: tuple = (), batch: int = 0
+) -> dict:
+    """Rules table for ``repro.sharding.api.use_rules``. Installed by the step
+    builders so the ``constrain()`` calls inside the model pin activation
+    shardings through scan bodies (GSPMD loses batch sharding inside nested
+    while loops otherwise — measured in EXPERIMENTS.md §Perf iteration 0).
+
+    ``client_axes`` are reserved for the FedNew client fan-out (the model runs
+    inside a shard_map manual over them); ``batch`` is the per-client batch
+    used to divisibility-check the 'batch' rule."""
+    sizes = mesh_axis_sizes(mesh)
+    m = sizes.get("model", 1)
+    b_axes = tuple(a for a in mesh.axis_names if a != "model" and a not in client_axes)
+    b_size = int(np.prod([sizes[a] for a in b_axes])) if b_axes else 1
+
+    def ok(dim: int, n: int) -> bool:
+        return n > 1 and dim % n == 0 and dim >= n
+
+    dh = cfg.resolved_head_dim
+    mlstm_p = int(cfg.mlstm_proj_factor * cfg.d_model)
+    rules = {
+        "batch": b_axes if batch and ok(batch, b_size) and b_axes else None,
+        # residual stream stays REPLICATED across 'model' (Megatron layout):
+        # sharding it forced an all-gather before every projection — §Perf
+        # pair B iteration B1 measured 4.4e12 B/step of f32 tangent gathers.
+        "embed": None,
+        "heads": "model" if ok(cfg.n_heads, m) else None,
+        "kv": "model" if ok(cfg.n_kv_heads, m) else None,
+        # (seq_q query-chunk sharding measured and refuted — §Perf B3: the
+        # per-layer attention-output regather outweighs the dh gathers saved)
+        "seq_q": None,
+        "head_dim": "model" if ok(dh, m) and not ok(cfg.n_heads, m) else None,
+        "qkv": "model" if ok(cfg.n_heads * dh, m) else None,
+        "ffn": "model" if ok(cfg.d_ff, m) else None,
+        "vocab": "model" if ok(cfg.vocab_size, m) else None,
+        "expert": "model" if ok(cfg.n_experts, m) else None,
+        "expert_ffn": "model" if cfg.is_moe and ok(cfg.d_ff, m) and not ok(cfg.n_experts, m) else None,
+        # dispatch-capacity sharding over the batch axes ONLY when the expert
+        # dim can't take 'model' — sharding both dims of the scatter target
+        # forces GSPMD full remat (§Perf A3 and the dbrx regression it caused)
+        "moe_cap": (
+            (b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None))
+            if cfg.is_moe and b_axes and not ok(cfg.n_experts, m) else None
+        ),
+        # sub-expert split (§Perf pair A): when E doesn't divide the model
+        # axis, each expert is split into lcm(E,m)/E capacity slices so the
+        # dispatch buffer's leading dim == m and expert matmuls stay local.
+        "subexpert": None,
+        "_moe_split": 1,
+        "state": "model" if ok(cfg.lru_width or cfg.d_model, m) else None,
+        "mlstm_proj": "model" if ok(mlstm_p, m) else None,
+        "mlstm_dh": "model" if ok(mlstm_p // max(cfg.n_heads, 1), m) else None,
+        "gates4": "model" if ok(4 * cfg.d_model, m) else None,
+    }
+    # (sub-expert splitting measured and refuted — §Perf pair A iter A2/A3:
+    # double-sharded dispatch scatters force GSPMD full rematerialization)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, *, client_axes: tuple = (), global_batch: int = 0) -> P:
+    """Leading-batch-axis spec for (B, ...) or (n_clients, B/n, ...) batches."""
+    sizes = mesh_axis_sizes(mesh)
+    if client_axes:
+        rest = tuple(
+            a for a in data_axes(mesh, exclude=client_axes)
+        )
+        rest = _divisible_prefix(rest, sizes, global_batch) if global_batch else rest
+        return P(client_axes if len(client_axes) > 1 else client_axes[0],
+                 (rest if len(rest) > 1 else (rest[0] if rest else None)))
+    axes = data_axes(mesh)
+    axes = _divisible_prefix(axes, sizes, global_batch) if global_batch else axes
+    if not axes:
+        return P(None)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def _divisible_prefix(axes: tuple, sizes: dict, dim: int) -> tuple:
+    """Longest prefix of ``axes`` whose product divides ``dim``."""
+    out = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * sizes[a]) == 0:
+            out.append(a)
+            prod *= sizes[a]
+    return tuple(out)
+
+
+def batch_shardings(batch_tree, mesh: Mesh, *, client_axes: tuple = ()):
+    """Shardings for a training/prefill batch dict. Every array shares the
+    leading-batch layout; trailing dims stay replicated (seq/model sharding of
+    activations is GSPMD-derived from the param specs)."""
+
+    def rule(leaf):
+        b_dim = leaf.shape[1] if client_axes else leaf.shape[0]
+        sp = batch_spec(mesh, client_axes=client_axes, global_batch=b_dim)
+        pad = leaf.ndim - len(sp)
+        return NamedSharding(mesh, P(*sp, *([None] * pad)))
+
+    return jax.tree.map(rule, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# decode caches / recurrent state
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cache_tree, mesh: Mesh, *, batch: int, kv_len: int):
+    """Spec tree for a decode cache pytree (attention KV ring buffers,
+    RG-LRU/xLSTM states). Dim identification is by size: the batch dim is
+    sharded over the data-like axes when divisible; for batch=1 workloads the
+    KV-length dim is sharded over ('data','model') instead."""
+    sizes = mesh_axis_sizes(mesh)
+    d_axes = data_axes(mesh)
+    d_size = int(np.prod([sizes[a] for a in d_axes])) if d_axes else 1
+    all_axes = tuple(mesh.axis_names)
+    all_size = int(np.prod(list(sizes.values())))
+
+    m_size = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        skip = 1 if _is_scan_leaf(path) else 0
+        spec = [None] * leaf.ndim
+        dims = list(range(skip, leaf.ndim))
+        # batch dim: first dim equal to `batch`
+        bdim = next((i for i in dims if leaf.shape[i] == batch), None)
+        if bdim is not None and batch % d_size == 0 and batch >= d_size:
+            spec[bdim] = d_axes if len(d_axes) > 1 else d_axes[0]
+            # KV caches dominate decode residency — put 'model' on the
+            # largest remaining divisible dim (KV length for long rings,
+            # kv-heads when the length doesn't divide). §Perf iteration 3.
+            cands = [
+                i for i in dims
+                if i != bdim and leaf.shape[i] % m_size == 0 and leaf.shape[i] >= m_size
+            ]
+            if m_size > 1 and cands:
+                spec[max(cands, key=lambda i: leaf.shape[i])] = "model"
+            return NamedSharding(mesh, P(*spec))
+        # length dim: first dim equal to kv_len (ring buffers may be shorter)
+        ldim = next((i for i in dims if leaf.shape[i] == kv_len), None)
+        if ldim is not None and kv_len % all_size == 0:
+            spec[ldim] = all_axes if len(all_axes) > 1 else all_axes[0]
+            return NamedSharding(mesh, P(*spec))
+        # fall back to the greedy param rule (recurrent states, short rings)
+        return NamedSharding(
+            mesh, leaf_spec(leaf.shape, sizes, ("model",), skip_leading=skip)
+        )
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)

@@ -1,0 +1,72 @@
+"""Subprocess body for test_federated_equivalence: runs FedNew-HF rounds on
+an 8-device host mesh (shard_map federated path) and through the vmap
+fallback (same 4 clients, same data, same init), printing both loss
+trajectories as JSON. Must be launched with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the test does)."""
+
+import dataclasses
+import json
+import sys
+
+import jax
+
+from repro.configs.base import InputShape
+from repro.configs.registry import get_config
+from repro.core import fednew_hf
+from repro.data.tokens import client_batches
+from repro.models import lm
+from repro.train import steps as steps_mod
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else "yi-6b"
+ROUNDS = 3
+SHAPE = InputShape("t", seq_len=32, global_batch=4, kind="train")
+
+
+def cfg():
+    return dataclasses.replace(get_config(ARCH).reduced(), remat=False)
+
+
+def run_federated(mesh):
+    c = cfg()
+    bundle = steps_mod.make_fednew_train_step(c, mesh, SHAPE)
+    assert bundle.n_clients == 4, bundle.n_clients
+    params = lm.init_params(c, jax.random.PRNGKey(0))
+    state = fednew_hf.init(params, c.fed, bundle.n_clients)
+    losses = []
+    with mesh:
+        step = bundle.jitted()
+        for r in range(ROUNDS):
+            batch = client_batches(c, SHAPE, 4, seed=0, step=r)
+            state, m = step(state, batch)
+            losses.append(float(m.loss))
+    return losses
+
+
+def run_vmap_reference():
+    c = cfg()
+    step = fednew_hf.make_step(
+        steps_mod.make_grad_fn(c), steps_mod.make_hvp_fn(c), c.fed
+    )
+    params = lm.init_params(c, jax.random.PRNGKey(0))
+    state = fednew_hf.init(params, c.fed, 4)
+    jstep = jax.jit(step)
+    losses = []
+    for r in range(ROUNDS):
+        batch = client_batches(c, SHAPE, 4, seed=0, step=r)
+        state, m = jstep(state, batch)
+        losses.append(float(m.loss))
+    return losses
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh8 = jax.make_mesh((4, 2), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(json.dumps({
+        "federated": run_federated(mesh8),
+        "vmap": run_vmap_reference(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Tests for matrix-free HVP + damped CG (the FedNew-HF inner solver)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hvp import cg_solve, gauss_newton_hvp, hvp, tree_dot
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_loss(params, batch):
+    # params is a pytree; batch carries the SPD quadratic.
+    x = jnp.concatenate([params["a"].ravel(), params["b"].ravel()])
+    P, q = batch
+    return 0.5 * x @ P @ x - q @ x
+
+
+def _quad_batch(d, key, cond=50.0):
+    k1, k2 = jax.random.split(key)
+    Q, _ = jnp.linalg.qr(jax.random.normal(k1, (d, d)))
+    eigs = jnp.logspace(0, np.log10(cond), d)
+    P = (Q * eigs) @ Q.T
+    q = jax.random.normal(k2, (d,))
+    return P, q
+
+
+def test_hvp_matches_dense_hessian():
+    params = {"a": jax.random.normal(KEY, (3, 2)), "b": jax.random.normal(KEY, (4,))}
+    batch = _quad_batch(10, jax.random.PRNGKey(1))
+    v = {"a": jax.random.normal(jax.random.PRNGKey(2), (3, 2)),
+         "b": jax.random.normal(jax.random.PRNGKey(3), (4,))}
+    out = hvp(quad_loss, params, v, batch)
+    vflat = jnp.concatenate([v["a"].ravel(), v["b"].ravel()])
+    expect = batch[0] @ vflat
+    got = jnp.concatenate([out["a"].ravel(), out["b"].ravel()])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 24), damping=st.floats(0.1, 10.0), seed=st.integers(0, 1000))
+def test_cg_solves_damped_spd_system(d, damping, seed):
+    """(P + damping I)^{-1} rhs to good accuracy with enough iterations."""
+    P, q = _quad_batch(d, jax.random.PRNGKey(seed), cond=20.0)
+    res = cg_solve(lambda v: P @ v, q, damping, iters=2 * d)
+    expect = jnp.linalg.solve(P + damping * jnp.eye(d), q)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(expect), rtol=2e-2, atol=2e-4)
+
+
+def test_cg_error_decreases_with_iters():
+    """Solution error (A-norm-adjacent) shrinks as the budget grows; the
+    2-norm residual is famously non-monotone so we check the error instead."""
+    d = 32
+    P, q = _quad_batch(d, KEY, cond=100.0)
+    expect = jnp.linalg.solve(P + jnp.eye(d), q)
+    errs = []
+    for iters in [1, 4, 16, 64]:
+        res = cg_solve(lambda v: P @ v, q, 1.0, iters=iters)
+        errs.append(float(jnp.linalg.norm(res.x - expect)))
+    assert errs[-1] < 1e-3 * errs[0]
+    assert errs[2] < errs[0]
+
+
+def test_cg_on_pytrees():
+    params = {"a": jax.random.normal(KEY, (5, 3)), "b": jnp.zeros((2,))}
+    batch = _quad_batch(17, jax.random.PRNGKey(9))
+    rhs = jax.tree.map(jnp.ones_like, params)
+    res = cg_solve(lambda v: hvp(quad_loss, params, v, batch), rhs, 2.0, iters=34)
+    # verify: (H + 2I) x == rhs
+    ax = hvp(quad_loss, params, res.x, batch)
+    ax = jax.tree.map(lambda h, x: h + 2.0 * x, ax, res.x)
+    err = jnp.sqrt(tree_dot(jax.tree.map(lambda a, b: a - b, ax, rhs),
+                            jax.tree.map(lambda a, b: a - b, ax, rhs)))
+    assert float(err) < 1e-3
+
+
+def test_gauss_newton_equals_hessian_for_linear_backbone():
+    """GGN == exact Hessian when the backbone is linear (J constant)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    W = jax.random.normal(k1, (6, 4))
+    labels = jax.nn.one_hot(jnp.array([1, 3, 0]), 6)
+    X = jax.random.normal(k2, (3, 4))
+
+    def backbone(params):
+        return X @ params["W"].T  # (3, 6) logits, linear in params
+
+    def head_loss(logits):
+        return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
+
+    params = {"W": W}
+    v = {"W": jax.random.normal(k3, (6, 4))}
+    ggn = gauss_newton_hvp(backbone, head_loss, params, v)
+    exact = hvp(lambda p, _: head_loss(backbone(p)), params, v, None)
+    np.testing.assert_allclose(np.asarray(ggn["W"]), np.asarray(exact["W"]), rtol=1e-4, atol=1e-6)
+
+
+def test_gauss_newton_psd():
+    """v^T GGN v >= 0 even for a nonconvex backbone."""
+    k1, k2 = jax.random.split(KEY)
+    params = {"W1": jax.random.normal(k1, (8, 4)), "W2": jax.random.normal(k2, (3, 8))}
+    X = jax.random.normal(jax.random.PRNGKey(5), (7, 4))
+    labels = jax.nn.one_hot(jnp.arange(7) % 3, 3)
+
+    def backbone(p):
+        return jnp.tanh(X @ p["W1"].T) @ p["W2"].T
+
+    def head_loss(logits):
+        return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
+
+    for seed in range(5):
+        v = jax.tree.map(
+            lambda x, k=seed: jax.random.normal(jax.random.PRNGKey(k), x.shape), params
+        )
+        g = gauss_newton_hvp(backbone, head_loss, params, v)
+        assert float(tree_dot(v, g)) >= -1e-6

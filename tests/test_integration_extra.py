@@ -1,0 +1,137 @@
+"""Extra integration coverage: Pallas dispatch inside the model, Q-FedNew-HF
+at LM scale, r=0 anchored FedNew-HF, serve/prefill consistency with kernels."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import InputShape
+from repro.configs.registry import get_config
+from repro.core import fednew_hf
+from repro.data.tokens import client_batches, make_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.train import steps as steps_mod
+
+TRAIN = InputShape("t", seq_len=32, global_batch=4, kind="train")
+
+
+def _cfg(arch, **kw):
+    cfg = dataclasses.replace(get_config(arch).reduced(), remat=False)
+    if kw:
+        cfg = dataclasses.replace(cfg, **kw)
+    return cfg
+
+
+def test_use_pallas_prefill_matches_jnp_path():
+    """cfg.use_pallas routes local attention through the Pallas SWA kernel
+    (interpret mode) — prefill logits must match the pure-jnp path."""
+    base = _cfg("mixtral-8x7b")  # SWA on every layer
+    pall = dataclasses.replace(base, use_pallas=True)
+    shape = InputShape("p", seq_len=32, global_batch=2, kind="prefill")
+    params = lm.init_params(base, jax.random.PRNGKey(0))
+    batch = make_batch(base, shape, seed=0)
+    prompt = {"tokens": batch["tokens"]}
+    lo_ref, _ = lm.prefill(params, base, prompt, max_len=40)
+    lo_ker, _ = lm.prefill(params, pall, prompt, max_len=40)
+    np.testing.assert_allclose(
+        np.asarray(lo_ker, np.float32), np.asarray(lo_ref, np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_q_fednew_hf_bits_path():
+    """Q-FedNew-HF: quantized uplinks converge and pay bits*P + 32/leaf."""
+    cfg = _cfg("yi-6b")
+    cfg = dataclasses.replace(cfg, fed=dataclasses.replace(cfg.fed, bits=4))
+    step = fednew_hf.make_step(
+        steps_mod.make_grad_fn(cfg), steps_mod.make_hvp_fn(cfg), cfg.fed
+    )
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    state = fednew_hf.init(params, cfg.fed, 2)
+    assert state.y_hat is not None
+    jstep = jax.jit(step)
+    losses = []
+    key = jax.random.PRNGKey(1)
+    for r in range(3):
+        batch = client_batches(cfg, TRAIN, 2, seed=0, step=r)
+        state, m = jstep(state, batch, jax.random.fold_in(key, r))
+        losses.append(float(m.loss))
+    assert np.isfinite(losses).all()
+    assert losses[1] < losses[0]
+    n_params = fednew_hf.param_count(params)
+    n_leaves = len(jax.tree.leaves(params))
+    assert float(m.uplink_bits_per_client) == pytest.approx(
+        4 * n_params + 32 * n_leaves, rel=1e-6
+    )
+    # quantized uplink is 8x smaller than the float32 one
+    assert float(m.uplink_bits_per_client) < 32 * n_params / 7
+
+
+def test_r0_anchored_hvp_variant():
+    """hessian_at_init=True (the paper's r=0): anchor params stay fixed while
+    x moves — state.anchor holds x^0 and steps still descend."""
+    cfg = _cfg("yi-6b")
+    cfg = dataclasses.replace(
+        cfg, fed=dataclasses.replace(cfg.fed, hessian_at_init=True)
+    )
+    step = fednew_hf.make_step(
+        steps_mod.make_grad_fn(cfg), steps_mod.make_hvp_fn(cfg), cfg.fed
+    )
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    state = fednew_hf.init(params, cfg.fed, 2)
+    assert state.anchor is not None
+    anchor0 = jax.tree.leaves(state.anchor)[0].copy()
+    jstep = jax.jit(step)
+    l0 = None
+    for r in range(2):
+        batch = client_batches(cfg, TRAIN, 2, seed=0, step=r)
+        state, m = jstep(state, batch)
+        l0 = l0 or float(m.loss)
+    # anchor unchanged; params moved
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(state.anchor)[0]), np.asarray(anchor0)
+    )
+    assert float(m.loss) < l0 * 1.05
+
+
+def test_bf16_state_runs_and_descends():
+    """The >=12B configs use bf16 FedNew state — verify numerics hold at
+    reduced scale (loss decreases, no NaNs, dual residual bounded)."""
+    cfg = _cfg("yi-6b")
+    cfg = dataclasses.replace(
+        cfg, fed=dataclasses.replace(cfg.fed, state_dtype="bfloat16")
+    )
+    mesh = make_host_mesh()
+    bundle = steps_mod.make_fednew_train_step(cfg, mesh, TRAIN)
+    state = steps_mod.init_train_state(cfg, mesh, TRAIN, jax.random.PRNGKey(0))
+    assert jax.tree.leaves(state.lam)[0].dtype == jnp.bfloat16
+    with mesh:
+        step = bundle.jitted()
+        batch = client_batches(cfg, TRAIN, bundle.n_clients, seed=0)
+        s1, m1 = step(state, batch)
+        s2, m2 = step(s1, batch)
+    assert jnp.isfinite(m2.loss)
+    assert float(m2.loss) < float(m1.loss)
+
+
+def test_use_pallas_xlstm_prefill_matches_jnp():
+    """use_pallas routes sLSTM through the fused Pallas recurrence and mLSTM
+    stays on the chunkwise path — prefill logits must match."""
+    base = _cfg("xlstm-350m")
+    pall = dataclasses.replace(base, use_pallas=True)
+    shape = InputShape("p", seq_len=32, global_batch=2, kind="prefill")
+    params = lm.init_params(base, jax.random.PRNGKey(0))
+    batch = make_batch(base, shape, seed=0)
+    prompt = {"tokens": batch["tokens"]}
+    lo_ref, _ = lm.prefill(params, base, prompt, max_len=40)
+    lo_ker, _ = lm.prefill(params, pall, prompt, max_len=40)
+    np.testing.assert_allclose(
+        np.asarray(lo_ker, np.float32), np.asarray(lo_ref, np.float32),
+        rtol=2e-4, atol=2e-4,
+    )

@@ -1,0 +1,214 @@
+"""Pallas kernel validation (interpret=True on CPU) against jnp oracles.
+
+Per the harness contract: every kernel sweeps shapes/dtypes and
+assert_allclose's against its ref.py."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.client_solve import ops as cs_ops
+from repro.kernels.client_solve.ref import client_solve_ref
+from repro.kernels.stoch_quant import ops as sq_ops
+from repro.kernels.stoch_quant.ref import stoch_quant_ref
+from repro.kernels.stoch_quant.stoch_quant import stoch_quant
+from repro.kernels.swa_attention import ops as swa_ops
+from repro.kernels.swa_attention.ref import swa_attention_ref
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,window,q_blk", [(256, 64, 64), (256, 100, 64), (512, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_kernel_matches_ref(S, window, q_blk, dtype):
+    B, H, Hkv, Dh = 2, 4, 2, 64
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, S, H, Dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (B, S, Hkv, Dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (B, S, Hkv, Dh), jnp.float32).astype(dtype)
+    got = swa_ops.swa_attention(q, k, v, window=window, q_blk=q_blk, interpret=True)
+    G = H // Hkv
+    q2 = q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    k2 = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+    v2 = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+    ref = swa_attention_ref(q2, k2, v2, window=window, groups=G)
+    ref = ref.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_swa_kernel_softcap():
+    B, S, H, Dh, window = 1, 128, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, Dh), jnp.float32) for kk in ks)
+    got = swa_ops.swa_attention(q, k, v, window=window, q_blk=64, cap=20.0, interpret=True)
+    q2 = q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    k2 = k.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    v2 = v.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    ref = swa_attention_ref(q2, k2, v2, window=window, cap=20.0)
+    ref = ref.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_swa_kernel_vs_model_attention():
+    """The kernel must agree with the model's jnp sliding-window path."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.models.attention import causal_attention
+
+    cfg = dataclasses.replace(
+        get_config("mixtral-8x7b").reduced(), attn_q_chunk=64, attn_kv_chunk=64
+    )
+    B, S, H, Hkv, Dh, window = 2, 256, 4, 2, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+    model_out = causal_attention(q, k, v, cfg, window=window, cap=None)
+    kern_out = swa_ops.swa_attention(q, k, v, window=window, q_blk=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(kern_out), np.asarray(model_out), atol=3e-5, rtol=3e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# client_solve
+# ---------------------------------------------------------------------------
+
+
+def _spd(key, n, d, cond=50.0):
+    Q = jnp.linalg.qr(jax.random.normal(key, (n, d, d)))[0]
+    eigs = jnp.logspace(0, np.log10(cond), d)[None]
+    return jnp.einsum("nij,nj,nkj->nik", Q, jnp.broadcast_to(eigs, (n, d)), Q)
+
+
+@pytest.mark.parametrize("d", [40, 99, 128, 263])
+@pytest.mark.parametrize("damping", [0.5, 2.0])
+def test_client_solve_matches_direct(d, damping):
+    n = 4
+    kA, kb = jax.random.split(jax.random.PRNGKey(d))
+    A = _spd(kA, n, d)
+    b = jax.random.normal(kb, (n, d), jnp.float32)
+    got = cs_ops.client_solve(A, b, damping=damping, iters=96, interpret=True)
+    ref = client_solve_ref(A, b, damping=damping)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4, rtol=2e-3)
+
+
+def test_client_solve_padding_exact_zero():
+    """Padded coordinates must solve to 0 and not perturb the true block."""
+    n, d = 2, 70  # pads to 128
+    kA, kb = jax.random.split(jax.random.PRNGKey(7))
+    A = _spd(kA, n, d, cond=10.0)
+    b = jax.random.normal(kb, (n, d), jnp.float32)
+    got = cs_ops.client_solve(A, b, damping=1.0, iters=96, interpret=True)
+    ref = client_solve_ref(A, b, damping=1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4, rtol=2e-3)
+
+
+def test_fednew_with_kernel_path_matches_cholesky():
+    """End-to-end: FedNew rounds with use_kernel=True track the faithful path."""
+    from repro.core import fednew
+    from repro.core.objectives import logistic_regression
+    from repro.data.synthetic import PAPER_DATASETS, make_dataset
+
+    data = make_dataset(PAPER_DATASETS["phishing"], jax.random.PRNGKey(0))
+    obj = logistic_regression(mu=1e-3)
+    cfg_ref = fednew.FedNewConfig(rho=1.0, alpha=1.0, hessian_period=1)
+    cfg_ker = fednew.FedNewConfig(rho=1.0, alpha=1.0, hessian_period=1, use_kernel=True)
+    _, m_ref = fednew.run(obj, data, cfg_ref, rounds=8)
+    _, m_ker = fednew.run(obj, data, cfg_ker, rounds=8)
+    np.testing.assert_allclose(
+        np.asarray(m_ker.loss), np.asarray(m_ref.loss), rtol=1e-4, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# stoch_quant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N", [1024, 4096])
+@pytest.mark.parametrize("bits", [1, 3, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stoch_quant_bit_exact_vs_ref(N, bits, dtype):
+    ky, kp, ku = jax.random.split(jax.random.PRNGKey(bits * 7 + N), 3)
+    y = jax.random.normal(ky, (N,), jnp.float32).astype(dtype)
+    prev = (jax.random.normal(kp, (N,), jnp.float32) * 0.1).astype(dtype)
+    u = jax.random.uniform(ku, (N,), jnp.float32)
+    R = jnp.max(jnp.abs(y.astype(jnp.float32) - prev.astype(jnp.float32)))
+    q_k, yh_k = stoch_quant(y, prev, u, R, bits=bits, interpret=True)
+    q_r, yh_r = stoch_quant_ref(y, prev, u, R, bits=bits)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    # integer levels are bit-exact; the dequantized value may differ by one
+    # output-dtype ulp (cast rounding order), so the tolerance is dtype-aware
+    rtol = 2 ** -7 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(
+        np.asarray(yh_k, np.float32), np.asarray(yh_r, np.float32), rtol=rtol, atol=1e-6
+    )
+
+
+def test_stoch_quant_ops_error_bound():
+    """|ŷ - y| <= Δ elementwise (paper's one-level error bound)."""
+    key = jax.random.PRNGKey(3)
+    y = jax.random.normal(key, (3000,), jnp.float32)
+    prev = jnp.zeros((3000,), jnp.float32)
+    res = sq_ops.quantize(jax.random.PRNGKey(4), y, prev, bits=3, interpret=True)
+    err = np.abs(np.asarray(res.y_hat - y))
+    assert err.max() <= float(res.delta) * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# slstm_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,t_blk", [(64, 16), (96, 32), (128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_slstm_scan_matches_ref(S, t_blk, dtype):
+    from repro.kernels.slstm_scan import slstm_scan, slstm_scan_ref
+
+    B, D, H = 2, 64, 4
+    w = D // H
+    ks = jax.random.split(jax.random.PRNGKey(S + t_blk), 4)
+    x4 = (jax.random.normal(ks[0], (B, S, 4 * D), jnp.float32)).astype(dtype)
+    r = (jax.random.normal(ks[1], (H, w, 4 * w), jnp.float32) * 0.3).astype(dtype)
+    bias = jnp.zeros((4 * D,), jnp.float32)
+    state = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+    hs_k, fin_k = slstm_scan(x4, r, bias, state, t_blk=t_blk, interpret=True)
+    hs_r, fin_r = slstm_scan_ref(x4, r, bias, state)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), atol=tol, rtol=tol)
+    for a, b in zip(fin_k, fin_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol, rtol=tol)
+
+
+def test_slstm_scan_matches_model_layer():
+    """Kernel output must match models.xlstm.slstm_apply's recurrence."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.kernels.slstm_scan import slstm_scan
+    from repro.models import xlstm as xl
+    from repro.models.layers import dense
+
+    cfg = dataclasses.replace(get_config("xlstm-350m").reduced())
+    params = xl.slstm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S, D = 2, 32, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32) * 0.5
+    y_ref, _ = xl.slstm_apply(params, cfg, x)
+    x4 = dense(params["wx"], x)
+    state = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+    hs, _ = slstm_scan(x4, params["r"], params["bias"], state, t_blk=16, interpret=True)
+    from repro.models.layers import rmsnorm
+
+    y_kern = dense(params["down"], rmsnorm(params["hnorm"], hs.astype(x.dtype), cfg.norm_eps))
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_ref), atol=2e-5, rtol=2e-5)
