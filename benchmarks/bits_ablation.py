@@ -14,8 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bits_to_gap, emit, rounds_to_gap, save_json
-from repro.core import baselines, fednew
+from benchmarks.common import bits_to_gap, emit, rounds_to_gap, run_solver, save_json
+from repro.core import baselines
 from repro.core.objectives import logistic_regression
 from repro.data.synthetic import PAPER_DATASETS, make_dataset
 
@@ -32,8 +32,10 @@ def run_dataset(name: str):
     _, f_star = baselines.reference_optimum(obj, data)
     out = {}
     for bits in WIDTHS:
-        cfg = fednew.FedNewConfig(rho=0.1, alpha=0.03, hessian_period=1, bits=bits)
-        _, hist = fednew.run(obj, data, cfg, ROUNDS)
+        _, hist = run_solver(
+            "q-fednew", obj, data, ROUNDS,
+            rho=0.1, alpha=0.03, hessian_period=1, bits=bits,
+        )
         out[f"{bits}b"] = {
             "rounds_to_target": rounds_to_gap(hist.loss, f_star, GAP),
             "bits_to_target": bits_to_gap(
@@ -41,8 +43,9 @@ def run_dataset(name: str):
             ),
             "final_gap": float(hist.loss[-1] - f_star),
         }
-    cfg = fednew.FedNewConfig(rho=0.1, alpha=0.03, hessian_period=1)
-    _, hist = fednew.run(obj, data, cfg, ROUNDS)
+    _, hist = run_solver(
+        "fednew", obj, data, ROUNDS, rho=0.1, alpha=0.03, hessian_period=1
+    )
     out["exact"] = {
         "rounds_to_target": rounds_to_gap(hist.loss, f_star, GAP),
         "bits_to_target": bits_to_gap(hist.loss, hist.uplink_bits_per_client, f_star, GAP),

@@ -13,8 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, rounds_to_gap, save_json
-from repro.core import baselines, fednew
+from benchmarks.common import emit, rounds_to_gap, run_solver, save_json
+from repro.core import baselines
 from repro.core.objectives import logistic_regression
 from repro.data.synthetic import PAPER_DATASETS, make_dataset
 
@@ -56,20 +56,14 @@ def run_dataset(name: str, rounds: int = ROUNDS):
         return out, (_time.perf_counter() - t0) * 1e6
 
     for r_label, period in [("r=1", 1), ("r=0.1", 10), ("r=0", 0)]:
-        cfg = fednew.FedNewConfig(rho=rho, alpha=alpha, hessian_period=period)
-        (_, hist), us = once(lambda c=cfg: fednew.run(obj, data, c, rounds))
+        (_, hist), us = once(lambda p=period: run_solver(
+            "fednew", obj, data, rounds, rho=rho, alpha=alpha, hessian_period=p))
         record(f"FedNew({r_label})", hist, us / rounds)
 
-    (_, hist), us = once(
-        lambda: baselines.run_simple(
-            baselines.newton_zero_init, baselines.newton_zero_step, obj, data,
-            baselines.NewtonZeroConfig(), rounds))
+    (_, hist), us = once(lambda: run_solver("newton-zero", obj, data, rounds))
     record("NewtonZero", hist, us / rounds)
 
-    (_, hist), us = once(
-        lambda: baselines.run_simple(
-            baselines.fedgd_init, baselines.fedgd_step, obj, data,
-            baselines.FedGDConfig(lr=2.0), rounds))
+    (_, hist), us = once(lambda: run_solver("fedgd", obj, data, rounds, lr=2.0))
     record("FedGD", hist, us / rounds)
 
     return {"f_star": float(f_star), "curves": curves}

@@ -11,8 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bits_to_gap, emit, save_json
-from repro.core import baselines, fednew
+from benchmarks.common import bits_to_gap, emit, run_solver, save_json
+from repro.core import baselines
 from repro.core.objectives import logistic_regression
 from repro.data.synthetic import PAPER_DATASETS, make_dataset
 
@@ -31,8 +31,11 @@ def run_dataset(name: str):
 
     out = {}
     for label, bits in [("FedNew(r=1)", None), (f"Q-FedNew({BITS}b,r=1)", BITS)]:
-        cfg = fednew.FedNewConfig(rho=RHO, alpha=ALPHA, hessian_period=1, bits=bits)
-        _, hist = fednew.run(obj, data, cfg, ROUNDS)
+        method = "q-fednew" if bits else "fednew"
+        _, hist = run_solver(
+            method, obj, data, ROUNDS,
+            rho=RHO, alpha=ALPHA, hessian_period=1, bits=bits,
+        )
         out[label] = {
             "gap": [float(g) for g in (hist.loss - f_star)],
             "bits_per_round": int(hist.uplink_bits_per_client[0]),

@@ -1,0 +1,72 @@
+"""Engine scaling demo: scan-compiled rounds + shard_map client parallelism.
+
+Three schedules of the SAME FedNew math (identical curves, different
+execution), via ``repro.core.engine``:
+
+  1. mode="host" — the legacy loop: one jitted step, one host dispatch per
+     round (the paper-repro reference).
+  2. mode="scan" — rounds grouped into lax.scan blocks, state donated; a
+     thousand-round run compiles twice (full block + tail) no matter how
+     many rounds you ask for.
+  3. mesh=client mesh — the scan blocks run inside a shard_map manual
+     region with the client axis of the data and of the per-client state
+     (lam / Cholesky factors / y_hat) sharded across devices; eq. 13 is one
+     all-reduce. On one CPU device this is a size-1 client axis — the same
+     code path a multi-device pod runs.
+
+    PYTHONPATH=src python examples/engine_scaling.py [--rounds 1000]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine, fednew
+from repro.core.objectives import logistic_regression
+from repro.data.synthetic import PAPER_DATASETS, make_dataset
+
+
+def timed(label, fn):
+    t0 = time.perf_counter()
+    state, metrics = fn()
+    jax.block_until_ready(metrics.loss)
+    dt = time.perf_counter() - t0
+    print(f"{label:28s} {dt:7.2f}s total  "
+          f"final |grad| {float(metrics.grad_norm[-1]):.2e}")
+    return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=1000)
+    ap.add_argument("--block", type=int, default=128)
+    args = ap.parse_args()
+
+    data = make_dataset(PAPER_DATASETS["a1a"], jax.random.PRNGKey(0))
+    obj = logistic_regression(mu=1e-3)
+    sol = fednew.solver(fednew.FedNewConfig(rho=0.1, alpha=0.03, hessian_period=10))
+    print(f"FedNew(r=0.1) on a1a-shaped data (n={data.n_clients}, d={data.dim}), "
+          f"{args.rounds} rounds, {len(jax.devices())} device(s)\n")
+
+    m_host = timed("host loop (legacy)",
+                   lambda: engine.run(sol, obj, data, args.rounds, mode="host"))
+    m_scan = timed(f"scan blocks (block={args.block})",
+                   lambda: engine.run(sol, obj, data, args.rounds,
+                                      block_size=args.block))
+    m_shard = timed("shard_map client mesh",
+                    lambda: engine.run_sharded_on_host(sol, obj, data,
+                                                       args.rounds,
+                                                       block_size=args.block))
+
+    np.testing.assert_allclose(np.asarray(m_host.loss), np.asarray(m_scan.loss),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_host.loss), np.asarray(m_shard.loss),
+                               rtol=1e-4, atol=1e-6)
+    print("\nAll three schedules produce the same loss trajectory "
+          "(checked to float32 tolerance).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: install dependencies and run the tier-1 verification.
+#
+#   ./scripts/ci.sh          install deps (unless SKIP_INSTALL=1), run tests
+#
+# Mirrors ROADMAP.md's tier-1 command exactly; keep the two in sync.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install --upgrade pip
+    python -m pip install -r requirements.txt
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q

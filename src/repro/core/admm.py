@@ -29,13 +29,16 @@ import jax.numpy as jnp
 def tree_mean_clients(tree, axis_name: str | None = None):
     """mean_i y_i: the ONLY cross-client communication in FedNew (eq. 13).
 
-    Inside ``shard_map`` pass ``axis_name`` to lower to a single all-reduce;
-    under plain vmap/pjit the leading axis is reduced locally and GSPMD inserts
-    the collective.
-    """
+    Leaves carry a leading (local) client axis which is always reduced.
+    Inside a ``shard_map`` manual region pass ``axis_name`` to additionally
+    all-reduce across the client mesh axis: because every shard holds the
+    same number of clients, mean-of-shard-means equals the global mean and
+    the whole reduction lowers to one collective. Under plain vmap/pjit the
+    local reduction is the global one and GSPMD inserts nothing."""
+    local = jax.tree.map(lambda v: jnp.mean(v, axis=0), tree)
     if axis_name is not None:
-        return jax.tree.map(lambda v: jax.lax.pmean(v, axis_name), tree)
-    return jax.tree.map(lambda v: jnp.mean(v, axis=0), tree)
+        return jax.tree.map(lambda v: jax.lax.pmean(v, axis_name), local)
+    return local
 
 
 def dual_update(lam, y_i, y, rho: float):
@@ -68,17 +71,21 @@ def one_pass(
     rhs = admm_rhs(g_i, lam, y_prev, rho)
     y_i = local_solve(rhs)
     y = tree_mean_clients(y_i, axis_name)
-    new_lam = dual_update(lam, y_i, _bcast_like(y, y_i, axis_name), rho)
+    new_lam = dual_update(lam, y_i, _bcast_like(y, y_i), rho)
     return AdmmPass(y_i=y_i, y=y, lam=new_lam)
 
 
-def _bcast_like(y, y_i, axis_name):
-    if axis_name is not None:
-        return y  # shard-local shapes already match
+def _bcast_like(y, y_i):
     return jax.tree.map(lambda g, yi: jnp.broadcast_to(g, yi.shape), y, y_i)
 
 
-def dual_sum_residual(lam) -> jax.Array:
-    """|| sum_i lam_i || — the invariant behind eq. 13; must stay ~0."""
-    sq = jax.tree.map(lambda l: jnp.sum(jnp.sum(l, axis=0) ** 2), lam)
+def dual_sum_residual(lam, axis_name: str | None = None) -> jax.Array:
+    """|| sum_i lam_i || — the invariant behind eq. 13; must stay ~0.
+
+    With ``axis_name`` the per-shard client sums are ``psum``-ed across the
+    client mesh axis first, so the residual is the global invariant."""
+    part = jax.tree.map(lambda l: jnp.sum(l, axis=0), lam)
+    if axis_name is not None:
+        part = jax.tree.map(lambda v: jax.lax.psum(v, axis_name), part)
+    sq = jax.tree.map(lambda v: jnp.sum(v**2), part)
     return jnp.sqrt(sum(jax.tree.leaves(sq)))

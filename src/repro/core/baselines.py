@@ -128,11 +128,38 @@ def reference_optimum(obj: Objective, data: ClientDataset, iters: int = 30):
     return state.x, obj.global_loss(state.x, data)
 
 
+def _solver(name, init_fn, step_fn, cfg):
+    """Adapt an (init_fn, step_fn, cfg) triple to the engine protocol.
+
+    The baselines communicate only through the ``Objective.global_*``
+    aggregates, which the engine makes mesh-aware — so they shard without any
+    per-method code (``client_fields=()``: no per-client state rows)."""
+    from repro.core import engine
+
+    return engine.FederatedSolver(
+        name=name,
+        init=lambda obj, data, key, x0=None: init_fn(obj, data, cfg, x0),
+        step=lambda state, obj, data, **_axis_kw: step_fn(state, obj, data, cfg),
+        client_fields=(),
+    )
+
+
+def fedgd_solver(cfg: FedGDConfig = FedGDConfig()):
+    return _solver("fedgd", fedgd_init, fedgd_step, cfg)
+
+
+def newton_zero_solver(cfg: NewtonZeroConfig = NewtonZeroConfig()):
+    return _solver("newton-zero", newton_zero_init, newton_zero_step, cfg)
+
+
+def newton_solver():
+    return _solver("newton", newton_init, newton_step, None)
+
+
 def run_simple(init_fn, step_fn, obj, data, cfg, rounds: int, x0=None):
-    state = init_fn(obj, data, cfg, x0)
-    jstep = jax.jit(lambda s: step_fn(s, obj, data, cfg))
-    history = []
-    for _ in range(rounds):
-        state, m = jstep(state)
-        history.append(m)
-    return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+    """Legacy driver: thin wrapper over the engine's host-loop mode
+    (bit-identical to the historical one-jitted-step-per-round loop)."""
+    from repro.core import engine
+
+    sol = _solver("simple", init_fn, step_fn, cfg)
+    return engine.run(sol, obj, data, rounds, x0=x0, mode="host")

@@ -27,7 +27,7 @@ import jax.scipy.linalg as jsl
 
 from repro.core import admm
 from repro.core.objectives import ClientDataset, Objective
-from repro.core.quantization import exact_payload_bits, quantize_batch
+from repro.core.quantization import exact_payload_bits, quantize_with_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,9 +100,28 @@ def _local_solve(chol, rhs, cfg: FedNewConfig):
 
 
 def step(
-    state: FedNewState, obj: Objective, data: ClientDataset, cfg: FedNewConfig
+    state: FedNewState,
+    obj: Objective,
+    data: ClientDataset,
+    cfg: FedNewConfig,
+    *,
+    axis_name: Optional[str] = None,
+    n_global_clients: Optional[int] = None,
 ):
-    """One outer round of Algorithm 1 (optionally quantized)."""
+    """One outer round of Algorithm 1 (optionally quantized).
+
+    With ``axis_name`` the round runs inside a ``shard_map`` manual region:
+    ``data`` and the per-client state rows (lam/chol/y_hat) hold only this
+    shard's clients, eq. 13 and the metric aggregates become collectives over
+    the client mesh axis, and ``n_global_clients`` (static, required on the
+    Q-FedNew path) lets every shard derive the same per-client PRNG keys as
+    the single-device run — sharding changes the schedule, not the math.
+    """
+    # Engine contract: a sharded caller passes an obj already bound to this
+    # axis (with_axis is idempotent then); the rebind here covers direct
+    # callers, whose metrics would otherwise silently aggregate shard-local.
+    if axis_name is not None:
+        obj = obj.with_axis(axis_name)
     # -- local Hessian refresh (pure client-side compute; no communication) --
     if cfg.hessian_period > 0:
         refresh = (state.step % cfg.hessian_period) == 0
@@ -118,7 +137,8 @@ def step(
 
     if cfg.bits is None:
         ap = admm.one_pass(
-            g_i, state.lam, state.y, cfg.rho, lambda r: _local_solve(chol, r, cfg)
+            g_i, state.lam, state.y, cfg.rho,
+            lambda r: _local_solve(chol, r, cfg), axis_name=axis_name,
         )
         y_i_tx, y, lam, y_hat = ap.y_i, ap.y, ap.lam, state.y_hat
         key = state.key
@@ -130,9 +150,20 @@ def step(
         rhs = admm.admm_rhs(g_i, state.lam, jnp.broadcast_to(state.y, g_i.shape), cfg.rho)
         y_i = _local_solve(chol, rhs, cfg)
         key, sub = jax.random.split(state.key)
-        qr = quantize_batch(sub, y_i, state.y_hat, cfg.bits)
+        n_local = y_i.shape[0]
+        if axis_name is None:
+            keys = jax.random.split(sub, n_local)
+        else:
+            # Split for ALL clients, slice this shard's rows: identical keys
+            # to the single-device run, whatever the client-axis layout.
+            if n_global_clients is None:
+                raise ValueError("sharded Q-FedNew needs static n_global_clients")
+            keys = jax.random.split(sub, n_global_clients)
+            start = jax.lax.axis_index(axis_name) * n_local
+            keys = jax.lax.dynamic_slice_in_dim(keys, start, n_local)
+        qr = quantize_with_keys(keys, y_i, state.y_hat, cfg.bits)
         y_i_tx, y_hat = qr.y_hat, qr.y_hat
-        y = jnp.mean(y_i_tx, axis=0)
+        y = admm.tree_mean_clients(y_i_tx, axis_name)
         lam = state.lam + cfg.rho * (y_i_tx - y)
         bits = jnp.asarray(cfg.bits * data.dim + 32, jnp.int32)
 
@@ -145,10 +176,23 @@ def step(
         loss=obj.global_loss(x, data),
         grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
         uplink_bits_per_client=bits,
-        dual_sum_residual=admm.dual_sum_residual(lam),
+        dual_sum_residual=admm.dual_sum_residual(lam, axis_name),
         direction_norm=jnp.linalg.norm(y),
     )
     return new_state, metrics
+
+
+def solver(cfg: FedNewConfig):
+    """This algorithm as a ``repro.core.engine.FederatedSolver``."""
+    from repro.core import engine
+
+    name = f"q-fednew({cfg.bits}b)" if cfg.bits else "fednew"
+    return engine.FederatedSolver(
+        name=name,
+        init=lambda obj, data, key, x0=None: init(obj, data, cfg, key, x0),
+        step=lambda state, obj, data, **axis_kw: step(state, obj, data, cfg, **axis_kw),
+        client_fields=("lam", "chol", "y_hat"),
+    )
 
 
 def run(
@@ -159,13 +203,10 @@ def run(
     key: Optional[jax.Array] = None,
     x0=None,
 ):
-    """Driver: jits one step and iterates on the host, collecting metrics."""
-    key = jax.random.PRNGKey(0) if key is None else key
-    state = init(obj, data, cfg, key, x0)
-    step_fn = jax.jit(lambda s: step(s, obj, data, cfg))
-    history = []
-    for _ in range(rounds):
-        state, m = step_fn(state)
-        history.append(m)
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *history)
-    return state, stacked
+    """Legacy driver, kept as the bit-exact reference: a thin wrapper over
+    ``repro.core.engine.run(mode="host")``, which jits one step and iterates
+    on the host exactly as this function always did. New code should call the
+    engine directly (``mode="scan"`` compiles whole round-blocks)."""
+    from repro.core import engine
+
+    return engine.run(solver(cfg), obj, data, rounds, key=key, x0=x0, mode="host")

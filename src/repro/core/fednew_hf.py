@@ -164,15 +164,16 @@ def make_step_federated(
         rep = lambda tree: jax.tree.map(lambda l: P(), tree)
         y_hat_state = state.y_hat if state.y_hat is not None else {}
         anchor_in = anchor if anchor is not None else {}
-        sm = jax.shard_map(
+        from repro.sharding.api import shard_map_compat
+
+        sm = shard_map_compat(
             body,
-            mesh=mesh,
+            mesh,
             in_specs=(rep(params), rep(y_prev), rep(anchor_in),
                       lead(state.lam), lead(y_hat_state), lead(client_batch)),
             out_specs=(lead(state.lam), lead(y_hat_state),
                        rep(y_prev), P(), P(), P()),
-            axis_names=set(client_axes),
-            check_vma=False,
+            manual_axes=client_axes,
         )
         lam, y_hat, y, loss, cg_res, gn_local = sm(
             params, y_prev, anchor_in, state.lam, y_hat_state, client_batch

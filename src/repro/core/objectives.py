@@ -52,20 +52,39 @@ class Objective:
     local_loss(x, data)    -> (n,)
     local_grad(x, data)    -> (n, d)
     local_hessian(x, data) -> (n, d, d)
+
+    ``axis_name`` makes the ``global_*`` aggregates mesh-aware: inside a
+    ``shard_map`` manual region where ``data`` holds only this shard's
+    clients, the local client mean is followed by a ``pmean`` across the
+    client mesh axis (shards hold equal client counts, so mean-of-means is
+    exact). Outside shard_map leave it None (the default) and the leading
+    client axis is reduced locally. Use :meth:`with_axis` to derive the
+    shard-aware view the engine passes into the manual region.
     """
 
     local_loss: Callable
     local_grad: Callable
     local_hessian: Callable
+    axis_name: str | None = None
+
+    def with_axis(self, axis_name: str | None) -> "Objective":
+        """Shard-aware view of the same oracles (see class docstring)."""
+        return dataclasses.replace(self, axis_name=axis_name)
+
+    def _agg(self, v: jax.Array) -> jax.Array:
+        v = jnp.mean(v, axis=0)
+        if self.axis_name is not None:
+            v = jax.lax.pmean(v, self.axis_name)
+        return v
 
     def global_loss(self, x: jax.Array, data: ClientDataset) -> jax.Array:
-        return jnp.mean(self.local_loss(x, data))
+        return self._agg(self.local_loss(x, data))
 
     def global_grad(self, x: jax.Array, data: ClientDataset) -> jax.Array:
-        return jnp.mean(self.local_grad(x, data), axis=0)
+        return self._agg(self.local_grad(x, data))
 
     def global_hessian(self, x: jax.Array, data: ClientDataset) -> jax.Array:
-        return jnp.mean(self.local_hessian(x, data), axis=0)
+        return self._agg(self.local_hessian(x, data))
 
 
 # ---------------------------------------------------------------------------

@@ -58,12 +58,23 @@ def quantize(
     return QuantResult(y_hat=y_hat, levels=q, delta=delta, payload_bits=payload)
 
 
+def quantize_with_keys(
+    keys: jax.Array, y: jax.Array, y_hat_prev: jax.Array, bits: int
+) -> QuantResult:
+    """vmap over a leading client axis with caller-supplied per-client keys.
+
+    The sharded engine path uses this directly: every shard splits the round
+    key into the *global* client key array and slices out its own clients, so
+    Q-FedNew draws the same per-client randomness whether the client axis is
+    vmapped on one device or shard_map-ped across a mesh."""
+    return jax.vmap(quantize, in_axes=(0, 0, 0, None))(keys, y, y_hat_prev, bits)
+
+
 def quantize_batch(
     key: jax.Array, y: jax.Array, y_hat_prev: jax.Array, bits: int
 ) -> QuantResult:
-    """vmap over a leading client axis; one PRNG fold per client."""
-    keys = jax.random.split(key, y.shape[0])
-    return jax.vmap(quantize, in_axes=(0, 0, 0, None))(keys, y, y_hat_prev, bits)
+    """vmap over a leading client axis; one PRNG split per client."""
+    return quantize_with_keys(jax.random.split(key, y.shape[0]), y, y_hat_prev, bits)
 
 
 def exact_payload_bits(d: int, dtype_bits: int = 32) -> int:

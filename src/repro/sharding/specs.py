@@ -1,6 +1,18 @@
 """Partition-spec rules: map every state/batch pytree onto the mesh.
 
-The policy is greedy size-based tensor sharding (DESIGN.md §5):
+**Client-axis mesh convention** (established by ``repro.core.engine`` and
+assumed by every module in this package): federated clients are enumerated
+by dedicated mesh axes. On the paper-scale engine path that is the 1-D
+``CLIENT_AXIS = 'clients'`` mesh from ``repro.launch.mesh.make_client_mesh``;
+on the LM-scale path it is ``fed.client_axes`` (usually ``('data',)``). A
+pytree leaf belongs to exactly one of two families: *per-client* leaves carry
+the global client count as their leading dim and are sharded over the client
+axes (``fed_state_specs`` / ``prepend_axes``); everything else — the global
+model x, the direction y, PS-side caches — is replicated across the client
+axes and may only use the remaining axes for tensor sharding. Inside a
+manual region the client axes are manual and the leftover axes stay auto.
+
+The tensor-sharding policy is greedy size-based sharding (DESIGN.md §5):
 
   * params — assign the 'model' axis to the largest divisible dim, then an
     FSDP 'data' assignment to the largest remaining divisible dim. Stacked
@@ -33,6 +45,9 @@ from repro.configs.base import ModelConfig
 # ---------------------------------------------------------------------------
 # axis bookkeeping
 # ---------------------------------------------------------------------------
+
+# Name of the dedicated client axis on engine meshes (see module docstring).
+CLIENT_AXIS = "clients"
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:
@@ -144,6 +159,33 @@ def shardings(spec_tree, mesh: Mesh):
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# engine state/data specs (paper-scale FederatedSolver states)
+# ---------------------------------------------------------------------------
+
+
+def fed_state_specs(state, client_fields: Sequence[str], axis: str):
+    """Spec tree for a solver state NamedTuple: fields named in
+    ``client_fields`` carry a leading global-client axis and are sharded over
+    the client mesh axis; every other field is replicated. This is the
+    engine-path counterpart of ``prepend_axes`` (which serves the LM-scale
+    per-client trees)."""
+    out = {}
+    for f in state._fields:
+        leaf = getattr(state, f)
+        if f in client_fields and getattr(leaf, "ndim", 0) >= 1:
+            out[f] = P(axis)
+        else:
+            out[f] = P()
+    return type(state)(**out)
+
+
+def fed_data_specs(data, axis: str):
+    """Spec tree for a ``ClientDataset``(-shaped) pytree: every leaf is split
+    on its leading (client) dim over the client mesh axis."""
+    return jax.tree.map(lambda _: P(axis), data)
 
 
 # ---------------------------------------------------------------------------

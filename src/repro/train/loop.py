@@ -3,6 +3,19 @@
 Drives the jitted step over the deterministic token pipeline, logs metrics,
 checkpoints periodically. Works on any mesh the launcher provides — one CPU
 device in the examples, the production mesh on a real cluster.
+
+Client-axis mesh convention (shared with ``repro.sharding.specs`` and
+``repro.core.engine``): clients are enumerated by the mesh axes named in
+``cfg.fed.client_axes`` (usually ``('data',)``, promoted to
+``('pod','data')`` on multi-pod meshes). The step bundles built by
+``repro.train.steps`` shard the leading client axis of batches and of the
+per-client state trees (lam, y_hat) over those axes and replicate
+params/y across them; the remaining axes form each client's private
+tensor-parallel mesh. This host loop is schedule-compatible with the
+paper-scale engine's ``mode="host"`` path: one jitted step per round.
+Scan-compiled multi-round blocks for LM-scale training follow the pattern
+of ``repro.core.engine._scan_blocks`` and are the natural next step once
+per-round host logging is no longer needed.
 """
 
 from __future__ import annotations

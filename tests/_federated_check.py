@@ -60,8 +60,9 @@ def run_vmap_reference():
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _make_mesh
+
+    mesh8 = _make_mesh((4, 2), ("data", "model"))
     print(json.dumps({
         "federated": run_federated(mesh8),
         "vmap": run_vmap_reference(),

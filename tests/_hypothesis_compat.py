@@ -1,0 +1,46 @@
+"""Degrade ``hypothesis`` property tests to skips when the extra is missing.
+
+The tier-1 suite must collect on a bare ``pytest + jax`` install (the extras
+in requirements.txt are optional in constrained containers). Test modules do
+
+    from _hypothesis_compat import given, settings, st
+
+instead of importing ``hypothesis`` directly: with hypothesis installed the
+real decorators are re-exported unchanged; without it, ``@given(...)`` marks
+the test as skipped at collection time and the module's non-property tests
+keep running.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised only without extra
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every attribute is a
+        callable returning None, so strategy expressions evaluated at module
+        scope (``st.floats(...)``) stay inert."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -3,8 +3,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import baselines, fednew
 from repro.core.objectives import logistic_regression

@@ -51,7 +51,10 @@ def test_train_step_lowers_with_shardings():
     bundle = steps_mod.make_fednew_train_step(cfg, mesh, TINY_TRAIN)
     with mesh:
         compiled = bundle.lower().compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # jax<=0.4.x returns one dict per device
+        ca = ca[0]
+    assert ca.get("flops", 0) > 0
 
 
 @pytest.mark.parametrize("arch", ["gemma2-27b", "xlstm-350m", "whisper-medium", "internvl2-2b"])
