@@ -2,27 +2,34 @@
 
 Structural table — no training needed. Verifies:
   * FedNew / Q-FedNew are O(d) at EVERY round including k=0;
-  * Newton-Zero pays 32 d^2 at k=0;
-  * exact Newton pays 32 d^2 every round.
+  * Newton-Zero pays w·d^2 at k=0 (w = transmitted word bits);
+  * exact Newton pays w·d^2 every round.
+
+Counts come from ``repro.core.quantization``'s exact Python-int helpers —
+the same accounting the engine's ``uplink_bits_per_client`` metric uses —
+so the table cannot drift from the runtime metric and never wraps at
+LM-scale d. ``dtype_bits`` is the transmitted word size (32 for float32
+runs; pass 64 to model float64 state).
 """
 
 from __future__ import annotations
 
 from benchmarks.common import emit, save_json
+from repro.core.quantization import exact_payload_bits, payload_bits
 from repro.data.synthetic import PAPER_DATASETS
 
 
-def payload(method: str, d: int, k: int, bits: int = 3) -> int:
+def payload(method: str, d: int, k: int, bits: int = 3, dtype_bits: int = 32) -> int:
     if method == "FedGD":
-        return 32 * d
+        return exact_payload_bits(d, dtype_bits)
     if method == "FedNew":
-        return 32 * d
+        return exact_payload_bits(d, dtype_bits)
     if method == "Q-FedNew":
-        return bits * d + 32
+        return payload_bits(bits, d)
     if method == "NewtonZero":
-        return 32 * d * d + 32 * d if k == 0 else 32 * d
+        return exact_payload_bits(d * d + d if k == 0 else d, dtype_bits)
     if method == "Newton":
-        return 32 * d * d + 32 * d
+        return exact_payload_bits(d * d + d, dtype_bits)
     raise ValueError(method)
 
 

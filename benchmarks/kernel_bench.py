@@ -67,20 +67,84 @@ def bench_client_solve():
 
 def bench_stoch_quant():
     out = {}
-    for N in (1 << 14, 1 << 18):
-        ky, ku = jax.random.split(jax.random.PRNGKey(N))
-        y = jax.random.normal(ky, (N,), jnp.float32)
-        prev = jnp.zeros((N,), jnp.float32)
-        u = jax.random.uniform(ku, (N,), jnp.float32)
-        R = jnp.max(jnp.abs(y))
+    # (n_clients, N): 1-D legacy shape, a 2-D batch, and a ragged tail
+    for n, N in ((1, 1 << 14), (8, 1 << 16), (4, (1 << 16) + 321)):
+        ky, ku = jax.random.split(jax.random.PRNGKey(N + n))
+        shape = (N,) if n == 1 else (n, N)
+        y = jax.random.normal(ky, shape, jnp.float32)
+        prev = jnp.zeros(shape, jnp.float32)
+        u = jax.random.uniform(ku, shape, jnp.float32)
+        R = jnp.max(jnp.abs(y), axis=-1)
+        if n == 1:
+            R = R.reshape(())
         (qk, yk), us = timed(
             lambda: stoch_quant(y, prev, u, R, bits=3, interpret=True), iters=3
         )
         qr, yr = stoch_quant_ref(y, prev, u, R, bits=3)
         exact = bool(jnp.all(qk == qr))
-        emit(f"kernel/stoch_quant/N{N}", us,
-             f"bitexact={'PASS' if exact else 'FAIL'};bytes={N*12:.2e}")
-        out[f"N{N}"] = {"us": us, "bit_exact": exact}
+        emit(f"kernel/stoch_quant/n{n}_N{N}", us,
+             f"bitexact={'PASS' if exact else 'FAIL'};bytes={n*N*12:.2e}")
+        out[f"n{n}_N{N}"] = {"us": us, "bit_exact": exact}
+    return out
+
+
+def bench_dispatch():
+    """Reference vs dispatched-kernel timings for the two FedNew hot loops,
+    per (d, bits, n_clients) — the JSON artifact the engine-promotion PR is
+    gated on. On CPU the kernel leg runs the Pallas interpreter (labelled in
+    the resolved-backend field), so treat its µs as a correctness gate, not
+    silicon speed."""
+    from repro.core import quantization
+    from repro.kernels import dispatch
+    from repro.kernels.client_solve.ref import client_solve_ref
+
+    resolved = dispatch.resolve_backend("pallas")
+    out = {"resolved_pallas_backend": resolved}
+    for d, bits, n in [(267, 3, 8), (1024, 3, 8), (1024, 8, 32), (4096, 8, 8)]:
+        key = jax.random.PRNGKey(d * bits + n)
+        ky, kp, kk = jax.random.split(key, 3)
+        y = jax.random.normal(ky, (n, d), jnp.float32)
+        prev = jax.random.normal(kp, (n, d), jnp.float32) * 0.1
+        keys = jax.random.split(kk, n)
+
+        ref_q = jax.jit(
+            lambda k_, y_, p_: quantization.quantize_with_keys(k_, y_, p_, bits)
+        )
+        ker_q = lambda: dispatch.quantize_with_keys(
+            keys, y, prev, bits, backend="pallas"
+        )
+        r_ref, us_ref = timed(lambda: ref_q(keys, y, prev), iters=3)
+        r_ker, us_ker = timed(ker_q, iters=3)
+        q_exact = bool(jnp.all(r_ker.levels == r_ref.levels))
+        y_exact = bool(jnp.all(r_ker.y_hat == r_ref.y_hat))
+
+        dsolve = min(d, 512)  # keep the dense (n, d, d) Hessians benchable
+        kA, kb = jax.random.split(jax.random.PRNGKey(dsolve + n))
+        Q = jnp.linalg.qr(jax.random.normal(kA, (n, dsolve, dsolve)))[0]
+        eigs = jnp.broadcast_to(jnp.logspace(0, 1.5, dsolve)[None], (n, dsolve))
+        A = jnp.einsum("nij,nj,nkj->nik", Q, eigs, Q)
+        b = jax.random.normal(kb, (n, dsolve), jnp.float32)
+        s_ref, us_sref = timed(lambda: client_solve_ref(A, b, damping=1.0), iters=3)
+        s_ker, us_sker = timed(
+            lambda: dispatch.client_solve(
+                A, b, damping=1.0, iters=64, backend="pallas"
+            ),
+            iters=3,
+        )
+        s_err = float(jnp.max(jnp.abs(s_ker - s_ref)) / jnp.max(jnp.abs(s_ref)))
+
+        tag = f"d{d}_b{bits}_n{n}"
+        emit(f"dispatch/quantize/{tag}", us_ker,
+             f"ref_us={us_ref:.1f};bitexact={'PASS' if q_exact and y_exact else 'FAIL'}")
+        emit(f"dispatch/solve/{tag}", us_sker,
+             f"ref_us={us_sref:.1f};relerr={s_err:.1e}")
+        out[tag] = {
+            "d": d, "bits": bits, "n_clients": n,
+            "quantize": {"reference_us": us_ref, "kernel_us": us_ker,
+                         "levels_bit_exact": q_exact, "y_hat_bit_exact": y_exact},
+            "solve": {"d": dsolve, "reference_us": us_sref,
+                      "kernel_us": us_sker, "rel_err": s_err},
+        }
     return out
 
 
@@ -115,6 +179,7 @@ def main():
         "client_solve": bench_client_solve(),
         "stoch_quant": bench_stoch_quant(),
         "slstm_scan": bench_slstm(),
+        "dispatch": bench_dispatch(),
     }
     save_json("kernel_bench.json", results)
     return results

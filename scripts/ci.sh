@@ -14,3 +14,10 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
+
+# Interpret-mode kernel leg: force the dispatch layer's "auto" onto the
+# Pallas (interpreter) path so the kernel hot loops — not the jnp
+# reference — back the engine while the federated-core suites run.
+# Catches kernel regressions the reference-backed tier-1 run can't see.
+REPRO_KERNEL_BACKEND=pallas python -m pytest -x -q \
+    tests/test_kernels.py tests/test_dispatch.py tests/test_core_fednew.py

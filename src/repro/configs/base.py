@@ -31,6 +31,10 @@ class FedConfig:
     hessian_at_init: bool = False  # r=0 variant: anchor HVPs at stored x^0
     use_gauss_newton: bool = True  # PSD GGN (restores the paper's convexity)
     bits: Optional[int] = None  # Q-FedNew-HF: stochastic-quantize y_i uplinks
+    # Kernel route for the leaf-wise quantizer (repro.kernels.dispatch):
+    # "auto" = compiled Pallas on TPU / jnp reference elsewhere;
+    # "pallas" forces the kernel (interpret off-TPU); "reference" forces jnp.
+    backend: str = "auto"
     state_dtype: str = "float32"  # lam/y/CG workspace dtype (bf16 for >=27B)
     # Mesh axes that enumerate FL clients. Remaining axes form each client's
     # private mesh. Large models need big clients (per-client dual state is

@@ -1,15 +1,19 @@
 """Baselines the paper compares against (Sec. 6): FedGD, Newton-Zero, Newton.
 
 * FedGD (McMahan et al., 2017): distributed gradient descent, eq. 2.
-  Uplink: 32 d bits/round (the gradient, in the clear — no privacy).
+  Uplink: w·d bits/round (the gradient, in the clear — no privacy).
 * Newton-Zero (Safaryan et al., 2021): clients upload their FULL local Hessian
-  once at k=0 (32 d^2 bits!) plus gradients every round; the PS factorizes
+  once at k=0 (w·d^2 bits!) plus gradients every round; the PS factorizes
   H^0 = mean_i H_i(x^0) once and applies x <- x - (H^0)^{-1} g^k.
 * Exact Newton (eq. 3): uploads Hessian AND gradient every round; used to
   produce the reference optimum f(x*) (the paper uses its 30th iterate).
 
 All three share the communication-accounting conventions of
-``repro.core.fednew`` so benchmark curves are directly comparable.
+``repro.core.fednew`` so benchmark curves are directly comparable: w is the
+word size of the *transmitted* dtype (32 for float32 — derived, not
+hardcoded, so float64 runs report 64·d), and counts are exact Python ints
+lowered via ``quantization.payload_bits_array`` (no int32 wraparound at
+LM-scale d).
 """
 
 from __future__ import annotations
@@ -22,6 +26,11 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from repro.core.objectives import ClientDataset, Objective
+from repro.core.quantization import (
+    exact_payload_bits,
+    payload_bits_array,
+    word_bits,
+)
 
 
 class SimpleState(NamedTuple):
@@ -58,7 +67,10 @@ def fedgd_step(state: SimpleState, obj: Objective, data, cfg: FedGDConfig):
     m = SimpleMetrics(
         loss=obj.global_loss(x, data),
         grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
-        uplink_bits_per_client=jnp.asarray(32 * data.dim, jnp.int32),
+        # the transmitted vector is the gradient — count at its width
+        uplink_bits_per_client=payload_bits_array(
+            exact_payload_bits(data.dim, word_bits(g))
+        ),
     )
     return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
 
@@ -84,13 +96,17 @@ def newton_zero_init(obj: Objective, data, cfg, x0=None) -> SimpleState:
 def newton_zero_step(state: SimpleState, obj: Objective, data, cfg):
     g = obj.global_grad(state.x, data)
     x = state.x - jsl.cho_solve((state.aux, True), g)
-    d = data.dim
+    d, w = data.dim, word_bits(g)
     # k=0 pays the full-Hessian upload on top of the gradient.
-    bits = jnp.where(state.step == 0, 32 * d * d + 32 * d, 32 * d)
+    bits = jnp.where(
+        state.step == 0,
+        payload_bits_array(exact_payload_bits(d * d + d, w)),
+        payload_bits_array(exact_payload_bits(d, w)),
+    )
     m = SimpleMetrics(
         loss=obj.global_loss(x, data),
         grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
-        uplink_bits_per_client=bits.astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32),
+        uplink_bits_per_client=bits,
     )
     return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
 
@@ -114,7 +130,9 @@ def newton_step(state: SimpleState, obj: Objective, data, cfg=None):
     m = SimpleMetrics(
         loss=obj.global_loss(x, data),
         grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
-        uplink_bits_per_client=jnp.asarray(32 * d * d + 32 * d, jnp.int32),
+        uplink_bits_per_client=payload_bits_array(
+            exact_payload_bits(d * d + d, word_bits(g))
+        ),
     )
     return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
 

@@ -76,7 +76,15 @@ class FederatedSolver:
 def get_solver(name: str, **hparams) -> FederatedSolver:
     """Solver registry: ``fednew`` / ``q-fednew`` (needs ``bits``) /
     ``fedgd`` / ``newton-zero`` / ``newton``. ``hparams`` feed the method's
-    config dataclass (e.g. ``rho=0.1, alpha=0.03, hessian_period=10``)."""
+    config dataclass (e.g. ``rho=0.1, alpha=0.03, hessian_period=10``).
+
+    FedNew/Q-FedNew accept ``backend="auto"|"pallas"|"reference"`` (plus
+    per-loop ``solve_backend``/``quant_backend`` overrides): the eq. 9
+    client solve and the eqs. 25-30 quantizer then route through the Pallas
+    kernels via ``repro.kernels.dispatch`` — compiled on TPU, interpret mode
+    when ``pallas`` is forced off-TPU, jnp reference otherwise. The sharded
+    driver composes with this: inside the ``shard_map`` region each device's
+    kernel call sees its own ``(n_clients/n_devices, ...)`` tile."""
     from repro.core import baselines, fednew
 
     key = name.lower().replace("_", "-")

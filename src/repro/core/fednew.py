@@ -12,8 +12,18 @@ r=1 -> 1, r=0.1 -> 10, r=0 -> 0 (never refresh; factor from x^0 is kept —
 the computation-efficient "zeroth Hessian" variant, one factorization ever).
 
 Communication accounting follows the paper: the metric of record is uplink
-bits per client per round — 32 d for FedNew, ``bits``·d + 32 for Q-FedNew.
-FedNew never transmits Hessians, so refresh rounds cost no extra bits.
+bits per client per round — w·d for FedNew (w = word bits of the transmitted
+dtype, 32 for float32), ``bits``·d + 32 for Q-FedNew. FedNew never transmits
+Hessians, so refresh rounds cost no extra bits. Counts are exact Python
+ints lowered via ``quantization.payload_bits_array`` (no int32 wraparound
+at LM scale).
+
+Both hot loops — the eq. 9 client solve and the eqs. 25-30 quantizer — are
+reached through ``repro.kernels.dispatch``: ``FedNewConfig.backend`` selects
+``auto`` (compiled Pallas on TPU, jnp reference elsewhere), ``pallas``
+(kernel everywhere; interpreter off-TPU), or ``reference``, with per-loop
+overrides ``solve_backend``/``quant_backend``. The legacy ``use_kernel``
+flag remains as an alias for ``solve_backend="pallas"``.
 """
 
 from __future__ import annotations
@@ -27,7 +37,13 @@ import jax.scipy.linalg as jsl
 
 from repro.core import admm
 from repro.core.objectives import ClientDataset, Objective
-from repro.core.quantization import exact_payload_bits, quantize_with_keys
+from repro.core.quantization import (
+    exact_payload_bits,
+    payload_bits,
+    payload_bits_array,
+    word_bits,
+)
+from repro.kernels import dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,11 +52,40 @@ class FedNewConfig:
     alpha: float = 1.0
     hessian_period: int = 1  # 0 => never refresh (r = 0)
     bits: Optional[int] = None  # None => FedNew; int => Q-FedNew
-    use_kernel: bool = False  # route eq. 9 through the Pallas client_solve op
+    use_kernel: bool = False  # legacy alias for solve_backend="pallas"
+    backend: str = "auto"  # "auto" | "pallas" | "reference" (both hot loops)
+    solve_backend: Optional[str] = None  # per-loop override, eq. 9
+    quant_backend: Optional[str] = None  # per-loop override, eqs. 25-30
+
+    def __post_init__(self):
+        for b in (self.backend, self.solve_backend, self.quant_backend):
+            if b is not None:
+                dispatch.validate_backend(b)
 
     @property
     def damping(self) -> float:
         return self.alpha + self.rho
+
+    @property
+    def resolved_solve_backend(self) -> str:
+        if self.solve_backend is not None:
+            return self.solve_backend
+        if self.backend == "auto" and self.use_kernel:
+            return "pallas"
+        return self.backend
+
+    @property
+    def resolved_quant_backend(self) -> str:
+        return self.quant_backend if self.quant_backend is not None else self.backend
+
+    @property
+    def solve_uses_kernel(self) -> bool:
+        """Static (trace-time) routing decision for the eq. 9 solve; also
+        decides whether state.chol caches Cholesky factors (reference) or
+        raw Hessians (the CG kernel applies the damping itself)."""
+        return dispatch.use_pallas(
+            dispatch.resolve_backend(self.resolved_solve_backend)
+        )
 
 
 class FedNewState(NamedTuple):
@@ -63,7 +108,7 @@ class StepMetrics(NamedTuple):
 
 def _factorize(obj: Objective, x, data, cfg: FedNewConfig):
     H = obj.local_hessian(x, data)  # (n, d, d)
-    if cfg.use_kernel:
+    if cfg.solve_uses_kernel:
         # Pallas path keeps the raw Hessian; the in-VMEM CG kernel applies
         # the (alpha+rho) damping itself (no host-side factorization at all).
         return H
@@ -91,11 +136,11 @@ def init(
 
 def _local_solve(chol, rhs, cfg: FedNewConfig):
     """(H_i + (alpha+rho) I)^{-1} rhs, batched over clients (eq. 9)."""
-    if cfg.use_kernel:
-        from repro.kernels.client_solve import ops as ksolve
-
+    if cfg.solve_uses_kernel:
         # `chol` holds the raw Hessians on this path (see _factorize)
-        return ksolve.client_solve(chol, rhs, damping=cfg.damping)
+        return dispatch.client_solve(
+            chol, rhs, damping=cfg.damping, backend=cfg.resolved_solve_backend
+        )
     return jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(chol, rhs)
 
 
@@ -142,7 +187,10 @@ def step(
         )
         y_i_tx, y, lam, y_hat = ap.y_i, ap.y, ap.lam, state.y_hat
         key = state.key
-        bits = jnp.asarray(exact_payload_bits(data.dim), jnp.int32)
+        # uplink = the full-precision y_i, at the width it is transmitted
+        bits = payload_bits_array(
+            exact_payload_bits(data.dim, word_bits(y_i_tx))
+        )
     else:
         # Q-FedNew: solve eq. 9, quantize the transmitted vector, and run the
         # aggregation + dual update on the *quantized* y_i so that the
@@ -161,11 +209,14 @@ def step(
             keys = jax.random.split(sub, n_global_clients)
             start = jax.lax.axis_index(axis_name) * n_local
             keys = jax.lax.dynamic_slice_in_dim(keys, start, n_local)
-        qr = quantize_with_keys(keys, y_i, state.y_hat, cfg.bits)
+        qr = dispatch.quantize_with_keys(
+            keys, y_i, state.y_hat, cfg.bits,
+            backend=cfg.resolved_quant_backend,
+        )
         y_i_tx, y_hat = qr.y_hat, qr.y_hat
         y = admm.tree_mean_clients(y_i_tx, axis_name)
         lam = state.lam + cfg.rho * (y_i_tx - y)
-        bits = jnp.asarray(cfg.bits * data.dim + 32, jnp.int32)
+        bits = payload_bits_array(payload_bits(cfg.bits, data.dim))
 
     x = state.x - y  # outer Newton step (eq. 14)
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.configs.base import FedConfig
 from repro.core import quantization
 from repro.core.hvp import cg_solve, tree_dot
+from repro.kernels import dispatch
 
 
 class FedNewHFState(NamedTuple):
@@ -75,9 +76,12 @@ def init(params, fed: FedConfig, n_clients: int) -> FedNewHFState:
     )
 
 
-def _quantize_clients(key, y_i, y_hat_prev, bits: int):
+def _quantize_clients(key, y_i, y_hat_prev, bits: int, backend: str = "auto"):
     """Leaf-wise stochastic quantization of every client's direction (paper
-    eqs. 25-30 applied per tensor; one range scalar per (client, leaf))."""
+    eqs. 25-30 applied per tensor; one range scalar per (client, leaf)).
+    Each ``(n_clients, leaf_size)`` block goes through the dispatch layer,
+    so on TPU it is one 2-D Pallas grid per leaf instead of a vmapped jnp
+    pass; key-splitting is identical across backends (bit-exact contract)."""
     leaves, treedef = jax.tree.flatten(y_i)
     prev = jax.tree.leaves(y_hat_prev)
     out = []
@@ -85,7 +89,9 @@ def _quantize_clients(key, y_i, y_hat_prev, bits: int):
         kj = jax.random.fold_in(key, j)
         n = l.shape[0]
         flat = l.reshape(n, -1)
-        res = quantization.quantize_batch(kj, flat, p.reshape(n, -1), bits)
+        res = dispatch.quantize_batch(
+            kj, flat, p.reshape(n, -1), bits, backend=backend
+        )
         out.append(res.y_hat.reshape(l.shape).astype(l.dtype))
     return jax.tree.unflatten(treedef, out)
 
@@ -141,7 +147,7 @@ def make_step_federated(
                     cidx = cidx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
                 ck = jax.random.fold_in(key, cidx)
                 y_hat_l = jax.tree.map(lambda x: x[0], y_hat)
-                y_i_tx = _quantize_one(ck, y_i, y_hat_l, fed.bits)
+                y_i_tx = _quantize_one(ck, y_i, y_hat_l, fed.bits, fed.backend)
                 new_y_hat = jax.tree.map(lambda x: x[None], y_i_tx)
             else:
                 y_i_tx, new_y_hat = y_i, y_hat
@@ -182,11 +188,7 @@ def make_step_federated(
             y_hat = None
 
         new_params = jax.tree.map(lambda p, d: p - d.astype(p.dtype), params, y)
-        if fed.bits:
-            n_leaves = len(jax.tree.leaves(params))
-            bits = fed.bits * param_count(params) + 32 * n_leaves
-        else:
-            bits = 32 * param_count(params)
+        bits = _uplink_bits(params, y, fed)
         new_state = FedNewHFState(
             params=new_params, y=y, lam=lam, anchor=anchor, y_hat=y_hat,
             step=state.step + 1,
@@ -197,21 +199,44 @@ def make_step_federated(
             direction_norm=jnp.sqrt(tree_dot(y, y)),
             dual_sum_residual=jnp.zeros(()),  # tracked on the host path only
             cg_residual=cg_res,
-            uplink_bits_per_client=jnp.asarray(float(bits), jnp.float32),
+            uplink_bits_per_client=bits,
         )
         return new_state, metrics
 
     return step
 
 
-def _quantize_one(key, y, y_hat_prev, bits: int):
-    """Leaf-wise quantization for a single client's direction tree."""
+def _uplink_bits(params, y_tx, fed: FedConfig) -> jax.Array:
+    """Per-client uplink bits for one round, exact at LM scale.
+
+    Q-FedNew-HF sends ``bits`` per coordinate plus one 32-bit range scalar
+    per (client, leaf); plain FedNew-HF sends the direction at its
+    transmitted width (state_dtype — derived, not hardcoded 32). Counted in
+    Python ints and lowered via ``payload_bits_array`` so 10^11-parameter
+    configs cannot wrap int32 (the old metric overflowed past d ≈ 2.7e8)."""
+    d = param_count(params)
+    if fed.bits:
+        n_leaves = len(jax.tree.leaves(params))
+        total = quantization.payload_bits(
+            fed.bits, d, r_bits=quantization.R_BITS * n_leaves
+        )
+    else:
+        w = max(quantization.word_bits(l) for l in jax.tree.leaves(y_tx))
+        total = quantization.exact_payload_bits(d, w)
+    return quantization.payload_bits_array(total)
+
+
+def _quantize_one(key, y, y_hat_prev, bits: int, backend: str = "auto"):
+    """Leaf-wise quantization for a single client's direction tree (the
+    shard_map path: one client per shard, so leaves are 1-D dispatches)."""
     leaves, treedef = jax.tree.flatten(y)
     prev = jax.tree.leaves(y_hat_prev)
     out = []
     for j, (l, p) in enumerate(zip(leaves, prev)):
         kj = jax.random.fold_in(key, j)
-        res = quantization.quantize(kj, l.reshape(-1), p.reshape(-1), bits)
+        res = dispatch.quantize(
+            kj, l.reshape(-1), p.reshape(-1), bits, backend=backend
+        )
         out.append(res.y_hat.reshape(l.shape).astype(l.dtype))
     return jax.tree.unflatten(treedef, out)
 
@@ -255,13 +280,13 @@ def make_step(
         n = jax.tree.leaves(client_batch)[0].shape[0]
         if fed.bits:
             assert key is not None, "Q-FedNew-HF needs a PRNG key per round"
-            y_i_tx = _quantize_clients(key, y_i, state.y_hat, fed.bits)
+            y_i_tx = _quantize_clients(
+                key, y_i, state.y_hat, fed.bits, fed.backend
+            )
             y_hat = y_i_tx
-            n_leaves = len(jax.tree.leaves(state.params))
-            bits = fed.bits * param_count(state.params) + 32 * n_leaves
         else:
             y_i_tx, y_hat = y_i, state.y_hat
-            bits = 32 * param_count(state.params)
+        bits = _uplink_bits(state.params, y_i_tx, fed)
 
         # --- eq. 13: THE communication — mean over the client axis ---------
         y = jax.tree.map(lambda v: jnp.mean(v, axis=0), y_i_tx)
@@ -286,7 +311,7 @@ def make_step(
                 jax.tree.map(lambda l: jnp.sum(l, axis=0), lam),
                 jax.tree.map(lambda l: jnp.sum(l, axis=0), lam))),
             cg_residual=jnp.mean(cg_res),
-            uplink_bits_per_client=jnp.asarray(float(bits), jnp.float32),
+            uplink_bits_per_client=bits,
         )
         return new_state, metrics
 

@@ -17,12 +17,19 @@ Properties (tested in tests/test_quantization.py):
 
 The transform is written so it can be ``vmap``-ed over a client axis and
 ``jit``-ed; the Pallas TPU kernel in ``repro.kernels.stoch_quant`` implements
-the same map given pre-drawn uniforms, validated against ``quantize`` here.
+the same map given pre-drawn uniforms, validated against ``quantize`` here
+(reached via ``repro.kernels.dispatch`` — this module stays the reference).
+
+Payload accounting is the paper's metric of record, so it must be exact at
+any scale: ``payload_bits`` counts in Python ints (arbitrary precision) and
+``payload_bits_array`` lowers the count to a traced array without int32
+wraparound — int64 under ``jax_enable_x64``, else float32 (monotone and
+non-negative at 10^11 parameters, where the old int32 form overflowed).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,9 +37,46 @@ import jax.numpy as jnp
 R_BITS = 32  # bits used to transmit the scalar range R per message
 
 
+def payload_bits(bits: int, d: int, *, r_bits: int = R_BITS) -> int:
+    """Exact uplink bits for one quantized message: ``bits``·d + ``r_bits``.
+
+    Pure Python-int arithmetic — never wraps, whatever the scale."""
+    return bits * d + r_bits
+
+
+def exact_payload_bits(d: int, dtype_bits: int = 32) -> int:
+    """Bits per message for the unquantized baselines (full-precision
+    vector). ``dtype_bits`` is the word size of the *transmitted* dtype —
+    derive it with :func:`word_bits`, don't assume 32."""
+    return dtype_bits * d
+
+
+def word_bits(x: Union[jax.Array, jnp.dtype]) -> int:
+    """Bits per element of an array (or dtype) as it crosses the wire."""
+    dtype = x.dtype if hasattr(x, "dtype") else jnp.dtype(x)
+    return 8 * dtype.itemsize
+
+
+def bits_metric_dtype() -> jnp.dtype:
+    """Widest exact dtype available for the uplink-bit metric: int64 with
+    x64 enabled, else float32 (int32 overflows past d ≈ 2.7e8 at 8 bits —
+    numpy 2.x actually raises OverflowError there)."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+def payload_bits_array(value: int) -> jax.Array:
+    """Lower an exact Python-int bit count to a traced metric array in
+    :func:`bits_metric_dtype` (float32 is within 2^-24 relative at any d;
+    enable x64 for bit-exact metrics past 2^24 bits)."""
+    dtype = bits_metric_dtype()
+    if dtype == jnp.int64:
+        return jnp.asarray(value, dtype)
+    return jnp.asarray(float(value), dtype)
+
+
 class QuantResult(NamedTuple):
     y_hat: jax.Array  # dequantized vector the PS reconstructs
-    levels: jax.Array  # integer levels actually transmitted (diagnostic)
+    levels: jax.Array  # int32 levels actually transmitted (the wire payload)
     delta: jax.Array  # scalar step size
     payload_bits: jax.Array  # scalar: bits on the wire for this message
 
@@ -54,8 +98,12 @@ def quantize(
     q = lo + (u < p).astype(y.dtype)
     q = jnp.clip(q, 0, n_levels)
     y_hat = y_hat_prev + delta * q - R
-    payload = jnp.asarray(bits * y.size + R_BITS, dtype=jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
-    return QuantResult(y_hat=y_hat, levels=q, delta=delta, payload_bits=payload)
+    payload = payload_bits_array(payload_bits(bits, y.size))
+    # levels are int32 on the wire — same dtype the Pallas kernel path emits,
+    # so QuantResult is backend-invariant field for field
+    return QuantResult(
+        y_hat=y_hat, levels=q.astype(jnp.int32), delta=delta, payload_bits=payload
+    )
 
 
 def quantize_with_keys(
@@ -75,8 +123,3 @@ def quantize_batch(
 ) -> QuantResult:
     """vmap over a leading client axis; one PRNG split per client."""
     return quantize_with_keys(jax.random.split(key, y.shape[0]), y, y_hat_prev, bits)
-
-
-def exact_payload_bits(d: int, dtype_bits: int = 32) -> int:
-    """Bits per message for the unquantized baselines (full-precision vector)."""
-    return dtype_bits * d

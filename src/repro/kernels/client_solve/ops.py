@@ -3,8 +3,10 @@
 ``client_solve(A, b, damping)`` pads d up to the 128-lane tile (identity
 diagonal + zero rhs on the pad, so padded coordinates solve to exactly 0 and
 never feed back into the CG recurrences), calls the Pallas kernel, and strips
-the pad. ``repro.core.fednew`` routes eq. 9 through here when
-``FedNewConfig.use_kernel`` is set.
+the pad. ``repro.core.fednew`` routes eq. 9 through here (via
+``repro.kernels.dispatch``) when the config's solve backend resolves to the
+Pallas path. ``interpret=None`` means "ask the dispatch layer": compiled on
+TPU, interpreter elsewhere — never the interpreter silently on TPU.
 """
 
 from __future__ import annotations
@@ -26,8 +28,12 @@ def _pad_up(d: int) -> int:
 @partial(jax.jit, static_argnames=("damping", "iters", "interpret"))
 def client_solve(
     A: jax.Array, b: jax.Array, *, damping: float, iters: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        from repro.kernels import dispatch
+
+        interpret = dispatch.default_interpret()
     n, d, _ = A.shape
     dp = _pad_up(d)
     if dp != d:

@@ -1,3 +1,3 @@
-from repro.kernels.stoch_quant.ops import quantize
+from repro.kernels.stoch_quant.ops import quantize, quantize_batch, quantize_with_keys
 from repro.kernels.stoch_quant.ref import stoch_quant_ref
 from repro.kernels.stoch_quant.stoch_quant import stoch_quant

@@ -1,5 +1,29 @@
-"""Jit wrapper: PRNG handling, padding, and the (levels, ŷ, Δ, payload)
-result tuple matching ``repro.core.quantization.QuantResult``."""
+"""Jit wrappers for the stoch_quant kernel: PRNG handling and the
+(levels, ŷ, Δ, payload) result tuple matching
+``repro.core.quantization.QuantResult``.
+
+Bit-exactness contract (float32): the uniforms are drawn exactly as the
+reference draws them — ``N`` samples in ``y.dtype`` from the same key (the
+old wrapper drew ``Np`` padded float32 samples, silently diverging from the
+reference under the same key) — and the 2-D kernel masks row tails
+in-kernel, so there is no host-side pad/copy at all. Same key therefore
+produces the same integer levels on either path (the levels ARE the wire
+payload); ``tests/test_dispatch.py`` pins this.
+
+The dequantized vector these wrappers return is reconstructed from the
+levels with the reference's exact expression (eq. 30) rather than taken
+from the kernel's fused in-kernel dequant: XLA is free to contract
+mul+add chains differently across separately-compiled programs (FMA,
+reciprocal folding), so the in-kernel ŷ can drift a few ulps from the
+reference while the levels stay identical. Reconstructing outside keeps
+whole Q-FedNew trajectories bit-identical across backends; callers that
+want the single-pass fused dequant (e.g. the kernel benchmark) use
+``stoch_quant`` directly.
+
+``interpret`` defaults to ``None`` = "ask the dispatch layer": compiled on
+TPU, interpreter elsewhere. The old hardcoded ``interpret=True`` default
+sent TPU users through the interpreter silently.
+"""
 
 from __future__ import annotations
 
@@ -8,26 +32,67 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import R_BITS, QuantResult
+from repro.core.quantization import QuantResult, payload_bits, payload_bits_array
 from repro.kernels.stoch_quant.stoch_quant import stoch_quant
 
 BLOCK = 1024
 
 
+def _resolve_interpret(interpret):
+    if interpret is None:
+        from repro.kernels import dispatch
+
+        return dispatch.default_interpret()
+    return interpret
+
+
 @partial(jax.jit, static_argnames=("bits", "interpret"))
 def quantize(key, y: jax.Array, y_hat_prev: jax.Array, bits: int,
-             *, interpret: bool = True) -> QuantResult:
+             *, interpret: bool | None = None) -> QuantResult:
     """Kernel-backed drop-in for ``quantization.quantize`` (1-D input)."""
+    interpret = _resolve_interpret(interpret)
     (N,) = y.shape
-    Np = -(-N // BLOCK) * BLOCK
-    u = jax.random.uniform(key, (Np,), jnp.float32)
-    R = jnp.max(jnp.abs(y - y_hat_prev))
-    yp = jnp.pad(y, (0, Np - N))
-    pp = jnp.pad(y_hat_prev, (0, Np - N))
-    q, y_hat = stoch_quant(yp, pp, u, R, bits=bits, interpret=interpret)
+    # Identical draw to the reference: N uniforms, y's dtype, same key.
+    u = jax.random.uniform(key, (N,), y.dtype)
+    diff = y - y_hat_prev
+    R = jnp.max(jnp.abs(diff))
+    q, _ = stoch_quant(y, y_hat_prev, u, R, bits=bits,
+                       block=BLOCK, interpret=interpret)
     n_levels = (1 << bits) - 1
     delta = 2.0 * R / n_levels
-    payload = jnp.asarray(bits * N + R_BITS, jnp.int32)
-    return QuantResult(
-        y_hat=y_hat[:N], levels=q[:N], delta=delta, payload_bits=payload
+    # eq. 30 with the reference's expression (see module docstring)
+    y_hat = y_hat_prev + delta * q.astype(y.dtype) - R
+    payload = payload_bits_array(payload_bits(bits, N))
+    return QuantResult(y_hat=y_hat, levels=q, delta=delta, payload_bits=payload)
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_with_keys(keys, y: jax.Array, y_hat_prev: jax.Array, bits: int,
+                       *, interpret: bool | None = None) -> QuantResult:
+    """Kernel-backed drop-in for ``quantization.quantize_with_keys``:
+    a ``(clients, d)`` batch with caller-supplied per-client keys, quantized
+    by ONE 2-D ``(clients, blocks)`` Pallas grid (the sharded engine feeds
+    this its per-device ``(n_clients/n_devices, d)`` tile directly)."""
+    interpret = _resolve_interpret(interpret)
+    n, N = y.shape
+    # Per-client draws identical to the reference's vmapped quantize.
+    u = jax.vmap(lambda k: jax.random.uniform(k, (N,), y.dtype))(keys)
+    diff = y - y_hat_prev
+    R = jnp.max(jnp.abs(diff), axis=1)  # (n,) per-client ranges
+    q, _ = stoch_quant(y, y_hat_prev, u, R, bits=bits,
+                       block=BLOCK, interpret=interpret)
+    n_levels = (1 << bits) - 1
+    delta = 2.0 * R / n_levels
+    y_hat = y_hat_prev + delta[:, None] * q.astype(y.dtype) - R[:, None]
+    payload = jnp.broadcast_to(
+        payload_bits_array(payload_bits(bits, N)), (n,)
     )
+    return QuantResult(y_hat=y_hat, levels=q, delta=delta, payload_bits=payload)
+
+
+def quantize_batch(key, y: jax.Array, y_hat_prev: jax.Array, bits: int,
+                   *, interpret: bool | None = None) -> QuantResult:
+    """Kernel-backed drop-in for ``quantization.quantize_batch`` (same
+    key-splitting, so randomness matches the reference per client)."""
+    keys = jax.random.split(key, y.shape[0])
+    return quantize_with_keys(keys, y, y_hat_prev, bits, interpret=interpret)

@@ -1,5 +1,7 @@
 """jnp oracle for the stoch_quant kernel: the paper's eqs. 25-30 given
-pre-drawn uniforms (bit-exact contract with the kernel)."""
+pre-drawn uniforms (bit-exact contract with the kernel). Accepts a single
+``(N,)`` vector with scalar R or a batched ``(n, N)`` block with per-row
+``(n,)`` ranges, mirroring the kernel's 2-D grid."""
 
 from __future__ import annotations
 
@@ -10,7 +12,8 @@ def stoch_quant_ref(y, y_hat_prev, u, R, *, bits: int):
     yf = y.astype(jnp.float32)
     pf = y_hat_prev.astype(jnp.float32)
     n_levels = float((1 << bits) - 1)
-    R = jnp.asarray(R, jnp.float32).reshape(())
+    R = jnp.asarray(R, jnp.float32)
+    R = R.reshape(-1, 1) if y.ndim == 2 else R.reshape(())
     delta = 2.0 * R / n_levels
     safe_delta = jnp.where(delta > 0, delta, 1.0)
     c = (yf - pf + R) / safe_delta

@@ -1,20 +1,26 @@
 """Stochastic quantizer kernel for Q-FedNew (paper eqs. 25-30).
 
-Elementwise map over the client's direction vector: given the previous
-quantized vector, the scalar range R (computed by a cheap jnp max outside —
-it is one reduction; the elementwise pass is the byte-moving hot loop), and
-pre-drawn uniforms, emit the integer levels and the dequantized vector.
+Elementwise map over a *batch* of client direction vectors: given the
+previous quantized vectors, per-client scalar ranges R_i (computed by a
+cheap jnp row-max outside — one reduction; the elementwise pass is the
+byte-moving hot loop), and pre-drawn uniforms, emit the integer levels and
+the dequantized vectors.
 
-Grid: 1-D over 128·8-aligned blocks of the flattened vector; every block
-loads (y, ŷ_prev, u) tiles into VMEM, computes
+Grid: 2-D ``(clients, blocks)`` over ``(1, block)`` tiles of the
+``(n, N)`` batch — the shape the sharded engine hands each device inside
+its ``shard_map`` region (``(n_clients/n_devices, d)``). Every tile loads
+(y, ŷ_prev, u) into VMEM together with its client's R_i, computes
 
     c  = (y - ŷ + R) / Δ,   Δ = 2R / (2^bits - 1)
-    q  = floor(c) + [u < frac(c)]          (unbiased, eq. 26-28)
+    q  = floor(c) + [u < frac(c)]          (unbiased, eqs. 26-28)
     ŷ' = ŷ + Δ·q - R                        (eq. 30)
 
-entirely in registers/VMEM, and writes (q, ŷ') back. The uniforms are taken
-as an input (rather than seeding in-kernel) so the kernel is bit-exact
-against ``ref.py`` under any PRNG.
+entirely in registers/VMEM, and writes (q, ŷ') back. The trailing tile of a
+row whose N is not a multiple of ``block`` is masked *in-kernel* (column
+iota vs the true N), so callers never pad: out-of-range lanes produce
+q = 0, ŷ' = ŷ_prev deterministically and Pallas drops the out-of-bounds
+writes. The uniforms are taken as an input (rather than seeding in-kernel)
+so the kernel is bit-exact against ``ref.py`` under any PRNG.
 """
 
 from __future__ import annotations
@@ -26,8 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(y_ref, prev_ref, u_ref, r_ref, q_ref, out_ref, *, bits: int):
-    y = y_ref[...].astype(jnp.float32)
+def _kernel(y_ref, prev_ref, u_ref, r_ref, q_ref, out_ref, *, bits: int,
+            n_cols: int, block: int):
+    j = pl.program_id(1)
+    y = y_ref[...].astype(jnp.float32)  # (1, block)
     prev = prev_ref[...].astype(jnp.float32)
     u = u_ref[...].astype(jnp.float32)
     R = r_ref[0, 0]
@@ -38,42 +46,53 @@ def _kernel(y_ref, prev_ref, u_ref, r_ref, q_ref, out_ref, *, bits: int):
     lo = jnp.floor(c)
     q = lo + (u < (c - lo)).astype(jnp.float32)
     q = jnp.clip(q, 0.0, n_levels)
+    # In-kernel tail mask: lanes past the true row length carry whatever
+    # Pallas padded in (garbage/NaN); force them to a defined (0, ŷ_prev)
+    # before the store so interpret and compiled modes agree exactly.
+    col = j * block + jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+    valid = col < n_cols
+    q = jnp.where(valid, q, 0.0)
+    y_hat = jnp.where(valid, prev + delta * q - R, prev)
     q_ref[...] = q.astype(q_ref.dtype)
-    out_ref[...] = (prev + delta * q - R).astype(out_ref.dtype)
+    out_ref[...] = y_hat.astype(out_ref.dtype)
 
 
 def stoch_quant(
-    y: jax.Array,  # (N,) flattened direction
-    y_hat_prev: jax.Array,  # (N,)
-    u: jax.Array,  # (N,) uniforms in [0, 1)
-    R: jax.Array,  # () or (1,) scalar range max|y - y_hat_prev|
+    y: jax.Array,  # (n, N) batched directions, or (N,) single vector
+    y_hat_prev: jax.Array,  # same shape as y
+    u: jax.Array,  # same shape as y, uniforms in [0, 1)
+    R: jax.Array,  # (n,) per-client ranges max|y_i - ŷ_i| (or scalar for 1-D)
     *,
     bits: int,
     block: int = 1024,
     interpret: bool = False,
 ):
-    """Returns (levels int32 (N,), y_hat (N,))."""
-    (N,) = y.shape
-    assert N % block == 0, (N, block)
-    grid = (N // block,)
-    R2 = jnp.reshape(R.astype(jnp.float32), (1, 1))
-    kernel = functools.partial(_kernel, bits=bits)
-    return pl.pallas_call(
+    """Returns (levels int32, y_hat) with y's shape. N need not divide
+    ``block`` — the trailing tile is masked in-kernel."""
+    squeeze = y.ndim == 1
+    if squeeze:
+        y, y_hat_prev, u = y[None], y_hat_prev[None], u[None]
+    n, N = y.shape
+    R2 = jnp.broadcast_to(jnp.asarray(R, jnp.float32).reshape(-1, 1), (n, 1))
+    grid = (n, -(-N // block))
+    kernel = functools.partial(_kernel, bits=bits, n_cols=N, block=block)
+    row_tile = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    q, y_hat = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            row_tile,
+            row_tile,
+            row_tile,
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
+        out_specs=[row_tile, row_tile],
         out_shape=[
-            jax.ShapeDtypeStruct((N,), jnp.int32),
-            jax.ShapeDtypeStruct((N,), y.dtype),
+            jax.ShapeDtypeStruct((n, N), jnp.int32),
+            jax.ShapeDtypeStruct((n, N), y.dtype),
         ],
         interpret=interpret,
     )(y, y_hat_prev, u, R2)
+    if squeeze:
+        return q[0], y_hat[0]
+    return q, y_hat

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro import checkpoint
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import fednew_hf
+from repro.core.quantization import word_bits
 from repro.data.tokens import client_batches
 from repro.models import lm
 from repro.optim import adamw, apply_updates, clip_by_global_norm
@@ -128,6 +129,10 @@ def train_fedgd(
             batch = client_batches(cfg, shape, n, seed=seed, step=r)
             params, opt_state, loss = jstep(params, opt_state, batch)
             if r % log_every == 0 or r == rounds - 1:
-                log.add(r, float(loss), uplink_bits=32.0 * fednew_hf.param_count(params))
+                g_bits = max(word_bits(l) for l in jax.tree.leaves(params))
+                log.add(
+                    r, float(loss),
+                    uplink_bits=float(g_bits * fednew_hf.param_count(params)),
+                )
                 print_fn(f"round {r:4d}  loss {float(loss):8.4f}  {time.time()-t0:6.1f}s")
     return log

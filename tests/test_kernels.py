@@ -166,6 +166,60 @@ def test_stoch_quant_ops_error_bound():
     assert err.max() <= float(res.delta) * (1 + 1e-6)
 
 
+@pytest.mark.parametrize("n,N,block", [
+    (3, 1000, 256),   # tail block per row
+    (4, 1024, 256),   # exact fit
+    (2, 77, 256),     # single partial block
+    (5, 1300, 512),   # tail with a bigger tile
+])
+def test_stoch_quant_2d_grid_tail_masking(n, N, block):
+    """The batched (clients, blocks) grid with in-kernel tail masking must
+    match the oracle for any N, with NO host-side padding (the old kernel
+    asserted N % block == 0)."""
+    ky, kp, ku = jax.random.split(jax.random.PRNGKey(n * N), 3)
+    y = jax.random.normal(ky, (n, N), jnp.float32)
+    prev = jax.random.normal(kp, (n, N), jnp.float32) * 0.1
+    u = jax.random.uniform(ku, (n, N), jnp.float32)
+    R = jnp.max(jnp.abs(y - prev), axis=1)
+    q_k, yh_k = stoch_quant(y, prev, u, R, bits=3, block=block, interpret=True)
+    q_r, yh_r = stoch_quant_ref(y, prev, u, R, bits=3)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(yh_k), np.asarray(yh_r), rtol=1e-6, atol=1e-6)
+
+
+def test_stoch_quant_2d_zero_diff_row():
+    """A client whose diff is exactly zero (R = 0) must reconstruct itself
+    exactly — the guarded division, per row of the 2-D grid."""
+    n, N = 3, 500
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, N), jnp.float32)
+    prev = y.at[1].set(0.0)  # row 1 has diff; rows 0 and 2 are zero-diff
+    prev = prev.at[0].set(y[0]).at[2].set(y[2])
+    u = jax.random.uniform(jax.random.PRNGKey(1), (n, N), jnp.float32)
+    R = jnp.max(jnp.abs(y - prev), axis=1)
+    q_k, yh_k = stoch_quant(y, prev, u, R, bits=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(yh_k[0]), np.asarray(y[0]))
+    np.testing.assert_array_equal(np.asarray(yh_k[2]), np.asarray(y[2]))
+    np.testing.assert_array_equal(np.asarray(q_k[0]), np.zeros(N, np.int32))
+    q_r, yh_r = stoch_quant_ref(y, prev, u, R, bits=4)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+
+
+def test_stoch_quant_ops_batched_matches_reference_quantize():
+    """ops.quantize_with_keys (one 2-D grid) == vmapped reference quantize,
+    levels bit for bit and ŷ bit for bit (same keys, float32)."""
+    from repro.core.quantization import quantize_with_keys as ref_qwk
+
+    keys = jax.random.split(jax.random.PRNGKey(5), 4)
+    y = jax.random.normal(jax.random.PRNGKey(6), (4, 1111), jnp.float32)
+    prev = jax.random.normal(jax.random.PRNGKey(8), (4, 1111), jnp.float32) * 0.3
+    res_k = sq_ops.quantize_with_keys(keys, y, prev, 3, interpret=True)
+    res_r = jax.jit(lambda: ref_qwk(keys, y, prev, 3))()
+    np.testing.assert_array_equal(
+        np.asarray(res_k.levels), np.asarray(res_r.levels)
+    )
+    np.testing.assert_array_equal(np.asarray(res_k.y_hat), np.asarray(res_r.y_hat))
+
+
 # ---------------------------------------------------------------------------
 # slstm_scan
 # ---------------------------------------------------------------------------

@@ -62,6 +62,57 @@ def test_payload_accounting():
     assert int(q.payload_bits) == 3 * 100 + 32
 
 
+def test_payload_bits_exact_at_lm_scale():
+    """Regression: the uplink-bit count must be exact (no int32 wraparound,
+    which kicked in past d ≈ 2.7e8 at 8 bits — numpy 2.x raised
+    OverflowError there) up to d = 1e9."""
+    from repro.core import quantization as Q
+
+    d = 1_000_000_000
+    assert Q.payload_bits(8, d) == 8 * d + 32  # exact Python int, any scale
+    assert Q.exact_payload_bits(d) == 32 * d
+    # traced form: int64 (bit-exact) under x64 ...
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        arr = Q.payload_bits_array(Q.payload_bits(8, d))
+        assert arr.dtype == jnp.int64
+        assert int(arr) == 8 * d + 32
+    # ... and float32 (positive, 2^-24-relative) without — never negative
+    arr32 = Q.payload_bits_array(Q.payload_bits(8, d))
+    assert arr32.dtype == jnp.float32
+    assert float(arr32) > 0
+    assert abs(float(arr32) - (8 * d + 32)) <= (8 * d + 32) * 2**-24
+
+
+def test_payload_bits_dtype_aware():
+    """Baselines must count the transmitted dtype's width, not 32."""
+    from repro.core import quantization as Q
+
+    assert Q.word_bits(jnp.zeros((3,), jnp.float32)) == 32
+    assert Q.word_bits(jnp.zeros((3,), jnp.bfloat16)) == 16
+    assert Q.word_bits(jnp.dtype(jnp.float16)) == 16
+    assert Q.exact_payload_bits(100, Q.word_bits(jnp.zeros((), jnp.bfloat16))) == 1600
+
+
+def test_fedgd_payload_tracks_float64_state():
+    """End-to-end satellite check: a float64 run reports 64·d uplink."""
+    from jax.experimental import enable_x64
+
+    from repro.core import baselines
+    from repro.core.objectives import ClientDataset, logistic_regression
+
+    with enable_x64():
+        key = jax.random.PRNGKey(0)
+        feats = jax.random.normal(key, (4, 16, 10), jnp.float64)
+        labels = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (4, 16)))
+        data = ClientDataset(features=feats, labels=labels.astype(jnp.float64))
+        obj = logistic_regression(mu=1e-3)
+        state = baselines.fedgd_init(obj, data, baselines.FedGDConfig())
+        _, m = baselines.fedgd_step(state, obj, data, baselines.FedGDConfig())
+        assert int(m.uplink_bits_per_client) == 64 * data.dim
+
+
 def test_batch_matches_per_client():
     """quantize_batch must equal per-client quantize with split keys."""
     key = jax.random.PRNGKey(3)
