@@ -11,15 +11,12 @@ bits; 1-bit pays a rounds penalty that eats its per-round savings.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import bits_to_gap, emit, rounds_to_gap, run_solver, save_json
-from repro.core import baselines
-from repro.core.objectives import logistic_regression
-from repro.data.synthetic import PAPER_DATASETS, make_dataset
-
+import dataclasses
 import os
+
+from benchmarks.common import bits_to_gap, emit, rounds_to_gap, save_json
+from repro import api
+from repro.core import baselines
 
 ROUNDS = int(os.environ.get("BENCH_ROUNDS", "150"))
 GAP = 1e-3
@@ -27,30 +24,35 @@ WIDTHS = (1, 2, 3, 4, 6)
 
 
 def run_dataset(name: str):
-    data = make_dataset(PAPER_DATASETS[name], jax.random.PRNGKey(42), dtype=jnp.float64)
-    obj = logistic_regression(mu=1e-3)
-    _, f_star = baselines.reference_optimum(obj, data)
-    out = {}
-    for bits in WIDTHS:
-        _, hist = run_solver(
-            "q-fednew", obj, data, ROUNDS,
-            rho=0.1, alpha=0.03, hessian_period=1, bits=bits,
-        )
-        out[f"{bits}b"] = {
-            "rounds_to_target": rounds_to_gap(hist.loss, f_star, GAP),
-            "bits_to_target": bits_to_gap(
-                hist.loss, hist.uplink_bits_per_client, f_star, GAP
-            ),
-            "final_gap": float(hist.loss[-1] - f_star),
-        }
-    _, hist = run_solver(
-        "fednew", obj, data, ROUNDS, rho=0.1, alpha=0.03, hessian_period=1
+    base = api.ExperimentSpec(
+        name=f"bits-ablation-{name}",
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=api.PartitionSpec(dataset=name, seed=42, dtype="float64"),
+        schedule=api.ScheduleSpec(rounds=ROUNDS),
     )
-    out["exact"] = {
-        "rounds_to_target": rounds_to_gap(hist.loss, f_star, GAP),
-        "bits_to_target": bits_to_gap(hist.loss, hist.uplink_bits_per_client, f_star, GAP),
-        "final_gap": float(hist.loss[-1] - f_star),
-    }
+    obj, data = api.build_problem(base)
+    _, f_star = baselines.reference_optimum(obj, data)
+    f_star = float(f_star)
+
+    hp = {"rho": 0.1, "alpha": 0.03, "hessian_period": 1}
+    sweep = {f"{b}b": api.SolverSpec("q-fednew", {**hp, "bits": b})
+             for b in WIDTHS}
+    sweep["exact"] = api.SolverSpec("fednew", hp)
+
+    out = {}
+    for label, solver in sweep.items():
+        res = api.run(dataclasses.replace(base, solver=solver))
+        out[label] = {
+            "rounds_to_target": rounds_to_gap(
+                res.metrics["loss"], f_star, GAP
+            ),
+            "bits_to_target": bits_to_gap(
+                res.metrics["loss"],
+                res.metrics["uplink_bits_per_client"],
+                f_star, GAP,
+            ),
+            "final_gap": res.metrics["loss"][-1] - f_star,
+        }
     return out
 
 
@@ -67,5 +69,7 @@ def main():
 
 
 if __name__ == "__main__":
+    import jax
+
     jax.config.update("jax_enable_x64", True)
     main()

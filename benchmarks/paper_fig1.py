@@ -6,17 +6,22 @@ test: FedNew(r=1) fastest, r=0.1 close, r=0 ~= Newton-Zero, FedGD slowest.
 The datasets are synthetic stand-ins with Table-1 geometry (no network access
 in this container); hyperparameters (alpha, rho per dataset) were tuned the
 way the paper tunes ("fastest convergence in the tested range").
+
+Each method is one declarative ``repro.api.ExperimentSpec``; the suite
+varies only the solver section. f(x*) is computed once per dataset on the
+problem ``api.build_problem`` resolves from the shared base spec — the same
+dataset instance every run sees (specs are deterministic per seed).
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import dataclasses
+import os
 
-from benchmarks.common import emit, rounds_to_gap, run_solver, save_json
+from benchmarks.common import emit, rounds_to_gap, save_json
+from repro import api
 from repro.core import baselines
-from repro.core.objectives import logistic_regression
-from repro.data.synthetic import PAPER_DATASETS, make_dataset
+from repro.data.synthetic import PAPER_DATASETS
 
 # (rho, alpha) per dataset; tuned over a small grid like the paper does.
 TUNED = {
@@ -25,48 +30,47 @@ TUNED = {
     "w8a": (0.1, 0.03),
     "phishing": (0.1, 0.03),
 }
-import os
 ROUNDS = int(os.environ.get("BENCH_ROUNDS", "150"))
 GAP_TARGET = 1e-6
 
 
+def base_spec(name: str, rounds: int) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        name=f"fig1-{name}",
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=api.PartitionSpec(dataset=name, seed=42, dtype="float64"),
+        schedule=api.ScheduleSpec(rounds=rounds),
+    )
+
+
 def run_dataset(name: str, rounds: int = ROUNDS):
-    key = jax.random.PRNGKey(42)
-    data = make_dataset(PAPER_DATASETS[name], key, dtype=jnp.float64)
-    obj = logistic_regression(mu=1e-3)
+    base = base_spec(name, rounds)
+    obj, data = api.build_problem(base)
     _, f_star = baselines.reference_optimum(obj, data)
+    f_star = float(f_star)
     rho, alpha = TUNED[name]
 
-    curves = {}
+    methods = {}
+    for r_label, period in [("r=1", 1), ("r=0.1", 10), ("r=0", 0)]:
+        methods[f"FedNew({r_label})"] = api.SolverSpec(
+            "fednew", {"rho": rho, "alpha": alpha, "hessian_period": period}
+        )
+    methods["NewtonZero"] = api.SolverSpec("newton-zero")
+    methods["FedGD"] = api.SolverSpec("fedgd", {"lr": 2.0})
 
-    def record(label, hist, us):
+    curves = {}
+    for label, solver in methods.items():
+        res = api.run(dataclasses.replace(base, solver=solver))
         curves[label] = {
-            "gap": [float(g) for g in (hist.loss - f_star)],
-            "bits": [int(b) for b in hist.uplink_bits_per_client],
-            "rounds_to_1e-6": rounds_to_gap(hist.loss, f_star, GAP_TARGET),
-            "us_per_round": us,
+            "gap": [l - f_star for l in res.metrics["loss"]],
+            "bits": [int(b) for b in res.metrics["uplink_bits_per_client"]],
+            "rounds_to_1e-6": rounds_to_gap(
+                res.metrics["loss"], f_star, GAP_TARGET
+            ),
+            "us_per_round": res.wall_clock_s * 1e6 / rounds,
         }
 
-    import time as _time
-
-    def once(fn):  # single timed run (no warmup: f64 CPU rounds are costly)
-        t0 = _time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out[1].loss)
-        return out, (_time.perf_counter() - t0) * 1e6
-
-    for r_label, period in [("r=1", 1), ("r=0.1", 10), ("r=0", 0)]:
-        (_, hist), us = once(lambda p=period: run_solver(
-            "fednew", obj, data, rounds, rho=rho, alpha=alpha, hessian_period=p))
-        record(f"FedNew({r_label})", hist, us / rounds)
-
-    (_, hist), us = once(lambda: run_solver("newton-zero", obj, data, rounds))
-    record("NewtonZero", hist, us / rounds)
-
-    (_, hist), us = once(lambda: run_solver("fedgd", obj, data, rounds, lr=2.0))
-    record("FedGD", hist, us / rounds)
-
-    return {"f_star": float(f_star), "curves": curves}
+    return {"f_star": f_star, "curves": curves}
 
 
 def main():
@@ -106,5 +110,7 @@ def main():
 
 
 if __name__ == "__main__":
+    import jax
+
     jax.config.update("jax_enable_x64", True)
     main()

@@ -4,19 +4,22 @@ Claims under test:
   (a) at equal rounds Q-FedNew(3-bit) reaches the same optimality gap;
   (b) at equal gap it transmits ~10x fewer uplink bits per client
       (paper: w8a, gap 1e-3, r=1: "almost 10x less").
+
+Declarative: the two methods are the same ``repro.api.ExperimentSpec`` with
+different solver sections; the bits-to-target readout uses the RunResult's
+exact integer uplink ledger.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import bits_to_gap, emit, run_solver, save_json
-from repro.core import baselines
-from repro.core.objectives import logistic_regression
-from repro.data.synthetic import PAPER_DATASETS, make_dataset
-
+import dataclasses
 import os
+
+from benchmarks.common import bits_to_gap, emit, save_json
+from repro import api
+from repro.core import baselines
+from repro.data.synthetic import PAPER_DATASETS
+
 ROUNDS = int(os.environ.get("BENCH_ROUNDS", "150"))
 BITS = 3
 GAP_TARGET = 1e-3
@@ -24,22 +27,34 @@ RHO, ALPHA = 0.1, 0.03
 
 
 def run_dataset(name: str):
-    key = jax.random.PRNGKey(42)
-    data = make_dataset(PAPER_DATASETS[name], key, dtype=jnp.float64)
-    obj = logistic_regression(mu=1e-3)
+    base = api.ExperimentSpec(
+        name=f"fig2-{name}",
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=api.PartitionSpec(dataset=name, seed=42, dtype="float64"),
+        schedule=api.ScheduleSpec(rounds=ROUNDS),
+    )
+    obj, data = api.build_problem(base)
     _, f_star = baselines.reference_optimum(obj, data)
+    f_star = float(f_star)
 
+    hp = {"rho": RHO, "alpha": ALPHA, "hessian_period": 1}
+    methods = {
+        "FedNew(r=1)": api.SolverSpec("fednew", hp),
+        f"Q-FedNew({BITS}b,r=1)": api.SolverSpec(
+            "q-fednew", {**hp, "bits": BITS}
+        ),
+    }
     out = {}
-    for label, bits in [("FedNew(r=1)", None), (f"Q-FedNew({BITS}b,r=1)", BITS)]:
-        method = "q-fednew" if bits else "fednew"
-        _, hist = run_solver(
-            method, obj, data, ROUNDS,
-            rho=RHO, alpha=ALPHA, hessian_period=1, bits=bits,
-        )
+    for label, solver in methods.items():
+        res = api.run(dataclasses.replace(base, solver=solver))
         out[label] = {
-            "gap": [float(g) for g in (hist.loss - f_star)],
-            "bits_per_round": int(hist.uplink_bits_per_client[0]),
-            "bits_to_target": bits_to_gap(hist.loss, hist.uplink_bits_per_client, f_star, GAP_TARGET),
+            "gap": [l - f_star for l in res.metrics["loss"]],
+            "bits_per_round": res.uplink_bits_total[0] // res.n_clients,
+            "bits_to_target": bits_to_gap(
+                res.metrics["loss"],
+                res.metrics["uplink_bits_per_client"],
+                f_star, GAP_TARGET,
+            ),
         }
     return out
 
@@ -73,5 +88,7 @@ def main():
 
 
 if __name__ == "__main__":
+    import jax
+
     jax.config.update("jax_enable_x64", True)
     main()

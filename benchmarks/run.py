@@ -4,11 +4,11 @@ One module per paper table/figure (+ kernels + privacy). Each emits
 ``name,us_per_call,derived`` CSV lines and writes a JSON artifact under
 benchmarks/out/. ``--only <name>`` runs a single suite.
 
-Training-curve suites (fig1/fig2/bits_ablation) run their methods through
-``repro.core.engine`` (see ``benchmarks.common.run_solver``): solvers are
-selected from the engine registry and rounds execute as scan-compiled
-blocks, so the per-round us numbers reflect the compiled driver rather than
-host dispatch overhead.
+Training-curve suites (fig1/fig2/bits_ablation) are declarative: each
+method is a ``repro.api.ExperimentSpec`` run through ``repro.api.run``
+(scan-compiled engine underneath), so the per-round us numbers reflect the
+compiled driver rather than host dispatch overhead and a new scenario is a
+spec edit, not a new loop.
 """
 
 from __future__ import annotations

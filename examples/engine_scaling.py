@@ -1,14 +1,15 @@
 """Engine scaling demo: scan-compiled rounds + shard_map client parallelism.
 
 Three schedules of the SAME FedNew math (identical curves, different
-execution), via ``repro.core.engine``:
+execution), expressed as three ``repro.api.ExperimentSpec``s that differ
+only in their ``schedule`` section:
 
   1. mode="host" — the legacy loop: one jitted step, one host dispatch per
      round (the paper-repro reference).
   2. mode="scan" — rounds grouped into lax.scan blocks, state donated; a
      thousand-round run compiles twice (full block + tail) no matter how
      many rounds you ask for.
-  3. mesh=client mesh — the scan blocks run inside a shard_map manual
+  3. mesh_devices="auto" — the scan blocks run inside a shard_map manual
      region with the client axis of the data and of the per-client state
      (lam / Cholesky factors / y_hat) sharded across devices; eq. 13 is one
      all-reduce. On one CPU device this is a size-1 client axis — the same
@@ -18,24 +19,11 @@ execution), via ``repro.core.engine``:
 """
 
 import argparse
-import time
+import dataclasses
 
-import jax
 import numpy as np
 
-from repro.core import engine, fednew
-from repro.core.objectives import logistic_regression
-from repro.data.synthetic import PAPER_DATASETS, make_dataset
-
-
-def timed(label, fn):
-    t0 = time.perf_counter()
-    state, metrics = fn()
-    jax.block_until_ready(metrics.loss)
-    dt = time.perf_counter() - t0
-    print(f"{label:28s} {dt:7.2f}s total  "
-          f"final |grad| {float(metrics.grad_norm[-1]):.2e}")
-    return metrics
+from repro import api
 
 
 def main() -> None:
@@ -44,26 +32,42 @@ def main() -> None:
     ap.add_argument("--block", type=int, default=128)
     args = ap.parse_args()
 
-    data = make_dataset(PAPER_DATASETS["a1a"], jax.random.PRNGKey(0))
-    obj = logistic_regression(mu=1e-3)
-    sol = fednew.solver(fednew.FedNewConfig(rho=0.1, alpha=0.03, hessian_period=10))
-    print(f"FedNew(r=0.1) on a1a-shaped data (n={data.n_clients}, d={data.dim}), "
-          f"{args.rounds} rounds, {len(jax.devices())} device(s)\n")
+    base = api.ExperimentSpec(
+        name="engine-scaling-a1a",
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=api.PartitionSpec(dataset="a1a", seed=0),
+        solver=api.SolverSpec(
+            "fednew", {"rho": 0.1, "alpha": 0.03, "hessian_period": 10}
+        ),
+        schedule=api.ScheduleSpec(rounds=args.rounds, block_size=args.block),
+    )
+    schedules = {
+        "host loop (legacy)": dataclasses.replace(
+            base.schedule, mode="host", block_size=None
+        ),
+        f"scan blocks (block={args.block})": base.schedule,
+        "shard_map client mesh": dataclasses.replace(
+            base.schedule, mesh_devices="auto"
+        ),
+    }
 
-    m_host = timed("host loop (legacy)",
-                   lambda: engine.run(sol, obj, data, args.rounds, mode="host"))
-    m_scan = timed(f"scan blocks (block={args.block})",
-                   lambda: engine.run(sol, obj, data, args.rounds,
-                                      block_size=args.block))
-    m_shard = timed("shard_map client mesh",
-                    lambda: engine.run_sharded_on_host(sol, obj, data,
-                                                       args.rounds,
-                                                       block_size=args.block))
+    import jax
 
-    np.testing.assert_allclose(np.asarray(m_host.loss), np.asarray(m_scan.loss),
-                               rtol=1e-4, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(m_host.loss), np.asarray(m_shard.loss),
-                               rtol=1e-4, atol=1e-6)
+    print(f"FedNew(r=0.1) on a1a-shaped data, {args.rounds} rounds, "
+          f"{len(jax.devices())} device(s)\n")
+
+    results = {}
+    for label, sched in schedules.items():
+        res = api.run(dataclasses.replace(base, schedule=sched))
+        results[label] = res
+        print(f"{label:28s} {res.wall_clock_s:7.2f}s total  "
+              f"final |grad| {res.metrics['grad_norm'][-1]:.2e}")
+
+    ref = np.asarray(results["host loop (legacy)"].metrics["loss"])
+    for label, res in results.items():
+        np.testing.assert_allclose(
+            ref, np.asarray(res.metrics["loss"]), rtol=1e-4, atol=1e-6
+        )
     print("\nAll three schedules produce the same loss trajectory "
           "(checked to float32 tolerance).")
 

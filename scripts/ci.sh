@@ -21,3 +21,10 @@ python -m pytest -x -q
 # Catches kernel regressions the reference-backed tier-1 run can't see.
 REPRO_KERNEL_BACKEND=pallas python -m pytest -x -q \
     tests/test_kernels.py tests/test_dispatch.py tests/test_core_fednew.py
+
+# Declarative-API leg: run a tiny spec end to end through the CLI so the
+# JSON schema and `python -m repro.api` cannot silently rot. The RunResult
+# JSON is uploaded as a CI artifact by the workflow.
+mkdir -p benchmarks/out
+python -m repro.api examples/specs/quickstart.json \
+    --out benchmarks/out/quickstart_runresult.json

@@ -1,0 +1,63 @@
+"""``repro.api`` — the declarative experiment surface.
+
+One frozen, JSON-serializable :class:`ExperimentSpec` describes a complete
+experiment (objective, partition, solver, schedule, participation,
+telemetry); :func:`run` executes it on the scan-compiled / shard_map engine
+and returns a :class:`RunResult` with stacked metrics, the exact cumulative
+uplink-bit ledger, and wall-clock. ``python -m repro.api spec.json`` runs a
+spec from the command line.
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        partition=api.PartitionSpec(dataset="w8a", seed=42),
+        solver=api.SolverSpec("q-fednew", {"rho": 0.1, "alpha": 0.03,
+                                           "bits": 3}),
+        schedule=api.ScheduleSpec(rounds=150),
+        participation=api.ParticipationSpec(fraction=0.5, kind="fixed"),
+    )
+    result = api.run(spec)
+    result.save_json("out.json")
+
+See docs/api.md for the full schema and a scenario cookbook.
+"""
+
+from repro.api.build import (
+    build_dataset,
+    build_mesh,
+    build_objective,
+    build_participation,
+    build_problem,
+    build_solver,
+)
+from repro.api.runner import RunResult, run, run_components
+from repro.api.specs import (
+    SCHEMA_VERSION,
+    ExperimentSpec,
+    ObjectiveSpec,
+    ParticipationSpec,
+    PartitionSpec,
+    ScheduleSpec,
+    SolverSpec,
+    TelemetrySpec,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ExperimentSpec",
+    "ObjectiveSpec",
+    "PartitionSpec",
+    "SolverSpec",
+    "ScheduleSpec",
+    "ParticipationSpec",
+    "TelemetrySpec",
+    "RunResult",
+    "run",
+    "run_components",
+    "build_objective",
+    "build_dataset",
+    "build_problem",
+    "build_solver",
+    "build_mesh",
+    "build_participation",
+]

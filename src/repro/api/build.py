@@ -1,0 +1,104 @@
+"""Builders: turn spec sections into the runtime objects the engine takes.
+
+Deterministic — the same spec always builds the same objective, dataset,
+solver, mesh, and participation law, so two processes holding the same JSON
+run the same experiment (the basis of the CLI and of benchmark reuse: a
+benchmark builds the problem once for f(x*) and knows ``run`` sees the
+identical dataset).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.specs import (
+    ExperimentSpec,
+    ObjectiveSpec,
+    PartitionSpec,
+    ScheduleSpec,
+    SolverSpec,
+)
+from repro.core import engine, objectives, participation as participation_lib
+from repro.data import synthetic
+
+
+def _dtype(name: str):
+    dt = {"float32": jnp.float32, "float64": jnp.float64}[name]
+    if dt == jnp.float64 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "partition dtype='float64' requires jax_enable_x64 "
+            "(jax.config.update('jax_enable_x64', True) before building; "
+            "the repro.api CLI does this automatically)"
+        )
+    return dt
+
+
+def build_objective(spec: ObjectiveSpec) -> objectives.Objective:
+    if spec.kind == "quadratic":
+        return objectives.quadratic()
+    return objectives.logistic_regression(mu=spec.mu)
+
+
+def build_dataset(
+    ospec: ObjectiveSpec, pspec: PartitionSpec
+) -> objectives.ClientDataset:
+    key = jax.random.PRNGKey(pspec.seed)
+    dtype = _dtype(pspec.dtype)
+    n, m, d = pspec.resolved_shape()
+    if ospec.kind == "quadratic":
+        return synthetic.make_quadratic_dataset(
+            key, n_clients=n, dim=d, cond=pspec.cond, dtype=dtype
+        )
+    if pspec.dataset == "custom":
+        ds = synthetic.DatasetSpec(
+            name="custom", n_clients=n, samples_per_client=m, dim=d,
+            sparse=False,
+        )
+    else:
+        ds = dataclasses.replace(
+            synthetic.PAPER_DATASETS[pspec.dataset],
+            n_clients=n, samples_per_client=m, dim=d,
+        )
+    if pspec.scheme == "dirichlet":
+        return synthetic.make_dirichlet_dataset(
+            ds, key, alpha=pspec.alpha, dtype=dtype
+        )
+    return synthetic.make_dataset(ds, key, dtype=dtype)
+
+
+def build_problem(
+    spec: ExperimentSpec,
+) -> Tuple[objectives.Objective, objectives.ClientDataset]:
+    """(objective, dataset) for a spec — what ``run`` itself uses, exposed so
+    callers (benchmarks computing f(x*)) can share the exact instances."""
+    return build_objective(spec.objective), build_dataset(
+        spec.objective, spec.partition
+    )
+
+
+def build_solver(spec: SolverSpec) -> engine.FederatedSolver:
+    return engine.get_solver(spec.name, **spec.hparams)
+
+
+def build_mesh(spec: ScheduleSpec, n_clients: int):
+    """None, or the 1-D client mesh the schedule asks for."""
+    if spec.mesh_devices is None:
+        return None
+    from repro.launch import mesh as mesh_lib
+
+    if spec.mesh_devices == "auto":
+        n_dev = engine.auto_client_devices(n_clients)
+    else:
+        n_dev = spec.mesh_devices
+    return mesh_lib.make_client_mesh(n_dev)
+
+
+def build_participation(
+    spec: ExperimentSpec,
+) -> Optional[participation_lib.Participation]:
+    part = spec.participation.to_runtime()
+    return part if part.active else None

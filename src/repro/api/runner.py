@@ -1,0 +1,203 @@
+"""``repro.api.run``: execute one :class:`ExperimentSpec`, return a
+:class:`RunResult`.
+
+The runner owns everything around the engine call: building the problem from
+the spec, threading the participation law, stacking metrics into plain
+Python lists, the *exact* cumulative uplink-bit ledger (Python-int
+arithmetic via the PR-2 accounting helpers — the traced per-round metric is
+float-typed under partial participation, the ledger never is), wall-clock,
+and JSON persistence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.api import build
+from repro.api.specs import ExperimentSpec
+from repro.core import engine, participation as participation_lib
+from repro.core.quantization import (
+    exact_payload_bits,
+    payload_bits,
+    word_bits,
+)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Everything one experiment produced, JSON-able as-is.
+
+    metrics                          per-round engine metrics, each a
+                                     (rounds,) list of floats (includes
+                                     ``gap`` when f(x*) was computed).
+    sampled_clients                  per-round participating-client counts
+                                     (always n under full participation).
+    uplink_bits_total                exact per-round uplink bits summed over
+                                     the sampled clients (Python ints — the
+                                     PR-2 accounting, no float rounding).
+    cumulative_uplink_bits_total     running sum of the above.
+    cumulative_uplink_bits_per_client  the paper's x-axis: cumulative mean
+                                     uplink bits per client (floats; exact
+                                     division of the int ledger).
+    """
+
+    spec: Dict[str, Any]
+    solver: str
+    rounds: int
+    n_clients: int
+    dim: int
+    metrics: Dict[str, List[float]]
+    sampled_clients: List[int]
+    uplink_bits_total: List[int]
+    cumulative_uplink_bits_total: List[int]
+    cumulative_uplink_bits_per_client: List[float]
+    wall_clock_s: float
+    f_star: Optional[float] = None
+
+    @property
+    def final_loss(self) -> float:
+        return self.metrics["loss"][-1]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def save_json(self, path: str) -> str:
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, default=float)
+        return path
+
+
+def _per_round_payload_bits(
+    solver_name: str, hparams: Dict[str, Any], d: int, word: int, rounds: int
+) -> List[int]:
+    """Exact bits ONE sampled client uploads in each round, as Python ints
+    (mirrors each step's metric expression; pinned against the traced
+    metric in tests/test_api.py)."""
+    if solver_name == "q-fednew" or (
+        solver_name == "fednew" and hparams.get("bits")
+    ):
+        return [payload_bits(int(hparams["bits"]), d)] * rounds
+    if solver_name in ("fednew", "fedgd"):
+        return [exact_payload_bits(d, word)] * rounds
+    if solver_name == "newton-zero":
+        first = exact_payload_bits(d * d + d, word)
+        rest = exact_payload_bits(d, word)
+        return [first] + [rest] * (rounds - 1)
+    if solver_name == "newton":
+        return [exact_payload_bits(d * d + d, word)] * rounds
+    raise KeyError(f"no uplink accounting for solver {solver_name!r}")
+
+
+def _transmitted_word_bits(data) -> int:
+    """Word size of the vectors on the wire: the solvers build their state
+    (and transmit) in the dataset's float dtype (non-float features fall
+    back to float32, mirroring ``fednew.init``)."""
+    dt = data.features.dtype
+    if dt not in (np.dtype("float32"), np.dtype("float64")):
+        return 32
+    return word_bits(dt)
+
+
+def run(spec: ExperimentSpec) -> RunResult:
+    """Build everything the spec describes, run it through the engine, and
+    assemble the result. Deterministic per the spec's three seeds (dataset /
+    run / participation)."""
+    obj, data = build.build_problem(spec)
+    solver = build.build_solver(spec.solver)
+    mesh = build.build_mesh(spec.schedule, data.n_clients)
+    part = build.build_participation(spec)
+    sched = spec.schedule
+
+    t0 = time.perf_counter()
+    state, metrics = engine.run(
+        solver, obj, data, sched.rounds,
+        key=jax.random.PRNGKey(spec.seed),
+        mode=sched.mode,
+        block_size=sched.block_size,
+        mesh=mesh,
+        participation=part,
+    )
+    jax.block_until_ready(metrics)
+    wall = time.perf_counter() - t0
+
+    metric_lists = {
+        name: [float(v) for v in np.asarray(vals)]
+        for name, vals in zip(metrics._fields, metrics)
+    }
+
+    f_star = None
+    if spec.telemetry.f_star_newton_iters > 0:
+        from repro.core import baselines
+
+        _, fs = baselines.reference_optimum(
+            obj, data, iters=spec.telemetry.f_star_newton_iters
+        )
+        f_star = float(fs)
+        metric_lists["gap"] = [l - f_star for l in metric_lists["loss"]]
+
+    # Exact integer uplink ledger: per-message payloads (Python ints) times
+    # the per-round sampled-client counts replayed from the mask schedule.
+    n = data.n_clients
+    counts = participation_lib.sampled_counts(part, sched.rounds, n)
+    payloads = _per_round_payload_bits(
+        spec.solver.name, dict(spec.solver.hparams), data.dim,
+        _transmitted_word_bits(data), sched.rounds,
+    )
+    totals = [p * c for p, c in zip(payloads, counts)]
+    cumulative: List[int] = []
+    acc = 0
+    for t in totals:
+        acc += t
+        cumulative.append(acc)
+
+    result = RunResult(
+        spec=spec.to_dict(),
+        solver=solver.name,
+        rounds=sched.rounds,
+        n_clients=n,
+        dim=data.dim,
+        metrics=metric_lists,
+        sampled_clients=counts,
+        uplink_bits_total=totals,
+        cumulative_uplink_bits_total=cumulative,
+        cumulative_uplink_bits_per_client=[c / n for c in cumulative],
+        wall_clock_s=wall,
+        f_star=f_star,
+    )
+    if spec.telemetry.save_path:
+        result.save_json(spec.telemetry.save_path)
+    return result
+
+
+def run_components(
+    solver_name: str,
+    obj,
+    data,
+    rounds: int,
+    *,
+    key=None,
+    mesh=None,
+    block_size=None,
+    mode: str = "scan",
+    participation=None,
+    **hparams,
+):
+    """Imperative escape hatch: run a registry solver on prebuilt
+    objective/data (the pre-spec surface benchmarks used). Returns the raw
+    engine ``(final_state, stacked_metrics)``. Prefer :func:`run` with an
+    :class:`ExperimentSpec` for anything new."""
+    sol = engine.get_solver(solver_name, **hparams)
+    return engine.run(
+        sol, obj, data, rounds,
+        key=key, mesh=mesh, block_size=block_size, mode=mode,
+        participation=participation,
+    )

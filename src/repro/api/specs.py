@@ -1,0 +1,333 @@
+"""Frozen, serializable experiment specs — the declarative half of
+``repro.api``.
+
+An :class:`ExperimentSpec` is a complete, self-contained description of one
+run: what objective, how the clients' data is partitioned, which solver with
+which hparams, how rounds are scheduled/compiled, which clients participate
+each round, and what to record. Specs are plain frozen dataclasses of
+JSON-able scalars, so
+
+  * ``to_dict`` / ``from_dict`` / ``to_json`` / ``from_json`` round-trip
+    losslessly (property-tested);
+  * the same spec file drives ``repro.api.run`` in-process, the
+    ``python -m repro.api`` CLI, and CI;
+  * every field is validated at construction — solver hparams against the
+    solver's config dataclass via the engine registry, enum-ish strings
+    against their closed sets — so typos fail loudly at spec build time, not
+    as a shape error three layers down.
+
+Everything an old hand-assembled script did maps onto one spec:
+
+    ExperimentSpec(
+        objective=ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=PartitionSpec(dataset="w8a", scheme="dirichlet",
+                                alpha=0.3, seed=42, dtype="float64"),
+        solver=SolverSpec("q-fednew",
+                          {"rho": 0.1, "alpha": 0.03, "bits": 3}),
+        schedule=ScheduleSpec(rounds=150, block_size=64, mode="scan"),
+        participation=ParticipationSpec(fraction=0.5, kind="fixed", seed=1),
+    )
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
+
+from repro.core import engine
+from repro.core import participation as participation_lib
+from repro.data import synthetic
+
+SCHEMA_VERSION = 1
+
+_OBJECTIVE_KINDS = ("logreg", "quadratic")
+_PARTITION_SCHEMES = ("iid", "dirichlet")
+_DTYPES = ("float32", "float64")
+_MODES = ("scan", "host")
+
+
+def _check_choice(value, name: str, choices) -> None:
+    if value not in choices:
+        raise ValueError(f"{name} must be one of {choices}, got {value!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveSpec:
+    """What the clients minimize.
+
+    kind="logreg"     regularized logistic regression (paper eqs. 31-32);
+                      ``mu`` is the l2 coefficient.
+    kind="quadratic"  per-client SPD quadratics (closed-form optimum; the
+                      test family). ``mu`` is ignored.
+    """
+
+    kind: str = "logreg"
+    mu: float = 1e-3
+
+    def __post_init__(self):
+        _check_choice(self.kind, "objective kind", _OBJECTIVE_KINDS)
+        if self.mu < 0:
+            raise ValueError(f"mu must be non-negative, got {self.mu}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """How client datasets are generated/partitioned.
+
+    dataset       a Table-1 name (``a1a``/``w7a``/``w8a``/``phishing``) or
+                  ``"custom"`` (then ``n_clients``/``samples_per_client``/
+                  ``dim`` are required). For quadratic objectives only the
+                  shape fields and ``cond`` are used.
+    scheme        ``"iid"`` (the original anchor-heterogeneity generator —
+                  byte-identical to pre-API behavior) or ``"dirichlet"``
+                  (label-skew: client class mixes ~ Dir(alpha)).
+    alpha         Dirichlet concentration (scheme="dirichlet").
+    seed          dataset PRNG seed (deterministic generation).
+    dtype         ``"float32"`` | ``"float64"`` (float64 requires
+                  ``jax_enable_x64``; the CLI enables it automatically).
+    """
+
+    dataset: str = "a1a"
+    scheme: str = "iid"
+    alpha: float = 0.5
+    seed: int = 0
+    dtype: str = "float32"
+    n_clients: Optional[int] = None
+    samples_per_client: Optional[int] = None
+    dim: Optional[int] = None
+    cond: float = 10.0  # quadratic conditioning (objective kind="quadratic")
+
+    def __post_init__(self):
+        _check_choice(self.scheme, "partition scheme", _PARTITION_SCHEMES)
+        _check_choice(self.dtype, "partition dtype", _DTYPES)
+        known = tuple(synthetic.PAPER_DATASETS) + ("custom",)
+        if self.dataset not in known:
+            raise ValueError(
+                f"unknown dataset {self.dataset!r}; have {known}"
+            )
+        if self.dataset == "custom":
+            missing = [
+                f for f in ("n_clients", "samples_per_client", "dim")
+                if getattr(self, f) is None
+            ]
+            if missing:
+                raise ValueError(
+                    f"dataset='custom' requires {missing} to be set"
+                )
+        if self.scheme == "dirichlet" and self.alpha <= 0:
+            raise ValueError(f"dirichlet alpha must be positive, got {self.alpha}")
+
+    def resolved_shape(self) -> Tuple[int, int, int]:
+        """(n_clients, samples_per_client, dim) after applying overrides."""
+        if self.dataset == "custom":
+            return (self.n_clients, self.samples_per_client, self.dim)
+        base = synthetic.PAPER_DATASETS[self.dataset]
+        return (
+            self.n_clients or base.n_clients,
+            self.samples_per_client or base.samples_per_client,
+            self.dim or base.dim,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Which method, with typed hparams.
+
+    ``name`` must be in the engine registry (``engine.solver_names()``) and
+    every ``hparams`` key must be a field of that solver's config dataclass —
+    both checked here, so a bad spec fails at construction with the valid
+    keys in the message.
+    """
+
+    name: str = "fednew"
+    hparams: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        canonical = engine.canonical_solver_name(self.name)
+        if canonical not in engine.solver_names():
+            raise ValueError(
+                f"unknown solver {self.name!r}; registered solvers: "
+                f"{', '.join(engine.solver_names())}"
+            )
+        object.__setattr__(self, "name", canonical)
+        object.__setattr__(self, "hparams", dict(self.hparams))
+        valid = engine.solver_hparam_names(canonical)
+        unknown = sorted(set(self.hparams) - set(valid))
+        if unknown:
+            raise ValueError(
+                f"solver {canonical!r}: unknown hparam(s) {unknown}; "
+                f"valid hparams: {list(valid) if valid else '<none>'}"
+            )
+        if canonical == "q-fednew" and not self.hparams.get("bits"):
+            raise ValueError("solver 'q-fednew' requires hparams['bits']")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """How rounds execute (the engine's schedule knobs).
+
+    mode          ``"scan"`` (lax.scan-compiled blocks, default) or
+                  ``"host"`` (legacy bit-exact per-round loop).
+    block_size    rounds per compiled scan block (None = engine default).
+    mesh_devices  None (no mesh) | int (1-D client mesh over that many
+                  devices) | ``"auto"`` (largest local device count dividing
+                  n_clients). Mesh runs are always scan-compiled.
+    """
+
+    rounds: int = 60
+    block_size: Optional[int] = None
+    mode: str = "scan"
+    mesh_devices: Union[None, int, str] = None
+
+    def __post_init__(self):
+        if self.rounds <= 0:
+            raise ValueError(f"rounds must be positive, got {self.rounds}")
+        if self.block_size is not None and self.block_size <= 0:
+            raise ValueError(
+                f"block_size must be positive, got {self.block_size}"
+            )
+        _check_choice(self.mode, "schedule mode", _MODES)
+        md = self.mesh_devices
+        if md is not None:
+            if isinstance(md, str):
+                _check_choice(md, "mesh_devices", ("auto",))
+            elif md < 1:
+                raise ValueError(f"mesh_devices must be >= 1, got {md}")
+            if self.mode != "scan":
+                raise ValueError(
+                    "mesh runs are always scan-compiled; use mode='scan' "
+                    "with mesh_devices"
+                )
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Per-round client sampling (see ``repro.core.participation``).
+
+    fraction=1.0 is full participation and reproduces pre-API trajectories
+    bit-exactly; fraction<1.0 samples clients per round (``"bernoulli"``:
+    independent coin flips, ``"fixed"``: exactly round(fraction*n) clients),
+    deterministic per ``seed``.
+    """
+
+    fraction: float = 1.0
+    kind: str = "bernoulli"
+    seed: int = 0
+
+    def __post_init__(self):
+        # Reuse the runtime law's validation (fraction range, kind set).
+        self.to_runtime()
+
+    def to_runtime(self) -> participation_lib.Participation:
+        return participation_lib.Participation(
+            fraction=self.fraction, kind=self.kind, seed=self.seed
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """What to record beyond the per-round engine metrics.
+
+    f_star_newton_iters  > 0 computes the paper's reference optimum f(x*)
+                         (that many exact-Newton iterates) and adds the
+                         optimality-gap curve to the result.
+    save_path            write the RunResult JSON here after the run
+                         (the CLI's ``--out`` overrides it).
+    tag                  free-form label carried into the result.
+    """
+
+    f_star_newton_iters: int = 0
+    save_path: Optional[str] = None
+    tag: str = ""
+
+    def __post_init__(self):
+        if self.f_star_newton_iters < 0:
+            raise ValueError(
+                "f_star_newton_iters must be >= 0, got "
+                f"{self.f_star_newton_iters}"
+            )
+
+
+_SECTIONS = {
+    "objective": ObjectiveSpec,
+    "partition": PartitionSpec,
+    "solver": SolverSpec,
+    "schedule": ScheduleSpec,
+    "participation": ParticipationSpec,
+    "telemetry": TelemetrySpec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One complete experiment; the single input of ``repro.api.run``.
+
+    ``seed`` keys the engine's run PRNG (Q-FedNew quantization randomness);
+    dataset and participation randomness have their own seeds in their
+    sections, so each source of randomness is independently pinnable.
+    """
+
+    objective: ObjectiveSpec = ObjectiveSpec()
+    partition: PartitionSpec = PartitionSpec()
+    solver: SolverSpec = SolverSpec()
+    schedule: ScheduleSpec = ScheduleSpec()
+    participation: ParticipationSpec = ParticipationSpec()
+    telemetry: TelemetrySpec = TelemetrySpec()
+    seed: int = 0
+    name: str = ""
+
+    def __post_init__(self):
+        if self.objective.kind == "quadratic" and self.partition.scheme != "iid":
+            raise ValueError(
+                "quadratic objectives support only partition scheme='iid'"
+            )
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = dataclasses.asdict(self)
+        out["schema_version"] = SCHEMA_VERSION
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        version = d.pop("schema_version", SCHEMA_VERSION)
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"spec schema_version {version} != supported {SCHEMA_VERSION}"
+            )
+        kw: Dict[str, Any] = {}
+        for key, value in d.items():
+            if key in _SECTIONS:
+                if not isinstance(value, Mapping):
+                    raise ValueError(f"spec section {key!r} must be a mapping")
+                section_cls = _SECTIONS[key]
+                field_names = {f.name for f in dataclasses.fields(section_cls)}
+                unknown = sorted(set(value) - field_names)
+                if unknown:
+                    raise ValueError(
+                        f"spec section {key!r}: unknown field(s) {unknown}; "
+                        f"valid fields: {sorted(field_names)}"
+                    )
+                kw[key] = section_cls(**value)
+            elif key in ("seed", "name"):
+                kw[key] = value
+            else:
+                raise ValueError(
+                    f"unknown spec key {key!r}; valid keys: "
+                    f"{sorted(_SECTIONS) + ['name', 'seed']}"
+                )
+        return cls(**kw)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        """Functional update (thin ``dataclasses.replace`` wrapper)."""
+        return dataclasses.replace(self, **kw)

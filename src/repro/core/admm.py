@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 
 
-def tree_mean_clients(tree, axis_name: str | None = None):
+def _expand_weights(w, v):
+    """Broadcast a (n,) client weight vector against a (n, ...) leaf."""
+    return w.reshape(w.shape + (1,) * (v.ndim - 1)).astype(v.dtype)
+
+
+def tree_mean_clients(tree, axis_name: str | None = None, weights=None):
     """mean_i y_i: the ONLY cross-client communication in FedNew (eq. 13).
 
     Leaves carry a leading (local) client axis which is always reduced.
@@ -34,16 +39,43 @@ def tree_mean_clients(tree, axis_name: str | None = None):
     all-reduce across the client mesh axis: because every shard holds the
     same number of clients, mean-of-shard-means equals the global mean and
     the whole reduction lowers to one collective. Under plain vmap/pjit the
-    local reduction is the global one and GSPMD inserts nothing."""
-    local = jax.tree.map(lambda v: jnp.mean(v, axis=0), tree)
+    local reduction is the global one and GSPMD inserts nothing.
+
+    ``weights`` (a (n,) {0,1} participation mask, or any non-negative
+    weighting) switches to the weighted mean over the *sampled* clients:
+    sum_i w_i y_i / sum_i w_i, with both partial sums ``psum``-ed across the
+    client mesh axis — exact whatever the shard layout. An all-zero round
+    (nobody sampled) returns 0, i.e. no update. ``weights=None`` is the
+    original unweighted path, bit for bit."""
+    if weights is None:
+        local = jax.tree.map(lambda v: jnp.mean(v, axis=0), tree)
+        if axis_name is not None:
+            return jax.tree.map(lambda v: jax.lax.pmean(v, axis_name), local)
+        return local
+    num = jax.tree.map(
+        lambda v: jnp.sum(_expand_weights(weights, v) * v, axis=0), tree
+    )
+    den = jnp.sum(weights)
     if axis_name is not None:
-        return jax.tree.map(lambda v: jax.lax.pmean(v, axis_name), local)
-    return local
+        num = jax.tree.map(lambda v: jax.lax.psum(v, axis_name), num)
+        den = jax.lax.psum(den, axis_name)
+    return jax.tree.map(
+        lambda v: v / jnp.maximum(den, 1.0).astype(v.dtype), num
+    )
 
 
-def dual_update(lam, y_i, y, rho: float):
-    """lam_i += rho (y_i - y) (eq. 12). Preserves sum_i lam_i = 0."""
-    return jax.tree.map(lambda l, yi, yg: l + rho * (yi - yg), lam, y_i, y)
+def dual_update(lam, y_i, y, rho: float, weights=None):
+    """lam_i += rho (y_i - y) (eq. 12). Preserves sum_i lam_i = 0.
+
+    With ``weights`` (participation mask) only sampled clients update their
+    dual; since ``y`` is then the mask-weighted mean, the invariant
+    sum_i lam_i = 0 still holds."""
+    if weights is None:
+        return jax.tree.map(lambda l, yi, yg: l + rho * (yi - yg), lam, y_i, y)
+    return jax.tree.map(
+        lambda l, yi, yg: l + rho * _expand_weights(weights, l) * (yi - yg),
+        lam, y_i, y,
+    )
 
 
 def admm_rhs(g_i, lam, y_prev, rho: float):
@@ -64,14 +96,18 @@ def one_pass(
     rho: float,
     local_solve: Callable,
     axis_name: str | None = None,
+    weights=None,
 ) -> AdmmPass:
     """One full ADMM pass. ``local_solve(rhs)`` applies
     (H_i + (alpha+rho) I)^{-1} batched over the leading client axis (or, under
-    shard_map, to this shard's client)."""
+    shard_map, to this shard's client). ``weights`` is a per-client
+    participation mask: eq. 13 becomes the weighted mean over sampled clients
+    and the dual update applies only to them (``None`` = full participation,
+    the original path)."""
     rhs = admm_rhs(g_i, lam, y_prev, rho)
     y_i = local_solve(rhs)
-    y = tree_mean_clients(y_i, axis_name)
-    new_lam = dual_update(lam, y_i, _bcast_like(y, y_i), rho)
+    y = tree_mean_clients(y_i, axis_name, weights=weights)
+    new_lam = dual_update(lam, y_i, _bcast_like(y, y_i), rho, weights=weights)
     return AdmmPass(y_i=y_i, y=y, lam=new_lam)
 
 

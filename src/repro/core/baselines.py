@@ -33,6 +33,22 @@ from repro.core.quantization import (
 )
 
 
+def _bits_metric(payload: int, obj: Objective, mask):
+    """Per-client uplink metric: the exact payload under full participation
+    (``mask=None``, the original bit-exact expression), or the payload scaled
+    by the globally sampled fraction via the shared
+    ``participation.masked_bits_metric`` convention. The fraction is
+    aggregated with the obj's axis awareness, so the metric is identical
+    under shard_map."""
+    if mask is None:
+        return payload_bits_array(payload)
+    from repro.core import participation
+
+    return participation.masked_bits_metric(
+        payload_bits_array(payload), mask, obj.axis_name
+    )
+
+
 class SimpleState(NamedTuple):
     x: jax.Array
     aux: jax.Array  # method-specific (e.g. cached PS-side Cholesky factor)
@@ -61,15 +77,18 @@ def fedgd_init(obj, data: ClientDataset, cfg, x0=None) -> SimpleState:
     return SimpleState(x=x, aux=jnp.zeros(()), step=jnp.zeros((), jnp.int32))
 
 
-def fedgd_step(state: SimpleState, obj: Objective, data, cfg: FedGDConfig):
-    g = obj.global_grad(state.x, data)
+def fedgd_step(state: SimpleState, obj: Objective, data, cfg: FedGDConfig,
+               mask=None):
+    # With a participation mask the PS averages only the sampled clients'
+    # gradients; loss/grad-norm metrics stay global (evaluation != comm).
+    g = obj.global_grad(state.x, data, weights=mask)
     x = state.x - cfg.lr * g
     m = SimpleMetrics(
         loss=obj.global_loss(x, data),
         grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
         # the transmitted vector is the gradient — count at its width
-        uplink_bits_per_client=payload_bits_array(
-            exact_payload_bits(data.dim, word_bits(g))
+        uplink_bits_per_client=_bits_metric(
+            exact_payload_bits(data.dim, word_bits(g)), obj, mask
         ),
     )
     return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
@@ -93,15 +112,15 @@ def newton_zero_init(obj: Objective, data, cfg, x0=None) -> SimpleState:
     return SimpleState(x=x, aux=L, step=jnp.zeros((), jnp.int32))
 
 
-def newton_zero_step(state: SimpleState, obj: Objective, data, cfg):
-    g = obj.global_grad(state.x, data)
+def newton_zero_step(state: SimpleState, obj: Objective, data, cfg, mask=None):
+    g = obj.global_grad(state.x, data, weights=mask)
     x = state.x - jsl.cho_solve((state.aux, True), g)
     d, w = data.dim, word_bits(g)
     # k=0 pays the full-Hessian upload on top of the gradient.
     bits = jnp.where(
         state.step == 0,
-        payload_bits_array(exact_payload_bits(d * d + d, w)),
-        payload_bits_array(exact_payload_bits(d, w)),
+        _bits_metric(exact_payload_bits(d * d + d, w), obj, mask),
+        _bits_metric(exact_payload_bits(d, w), obj, mask),
     )
     m = SimpleMetrics(
         loss=obj.global_loss(x, data),
@@ -122,16 +141,25 @@ def newton_init(obj, data, cfg=None, x0=None) -> SimpleState:
     return SimpleState(x=x, aux=jnp.zeros(()), step=jnp.zeros((), jnp.int32))
 
 
-def newton_step(state: SimpleState, obj: Objective, data, cfg=None):
-    g = obj.global_grad(state.x, data)
-    H = obj.global_hessian(state.x, data)
+def newton_step(state: SimpleState, obj: Objective, data, cfg=None, mask=None):
+    g = obj.global_grad(state.x, data, weights=mask)
+    H = obj.global_hessian(state.x, data, weights=mask)
+    if mask is not None:
+        # Empty round (nobody sampled): g and H aggregate to 0, and
+        # solve(0, 0) would NaN the trajectory forever. Substitute I for the
+        # Hessian; solve(I, 0) = 0, so x is simply unchanged — the same
+        # no-op semantics the other solvers degrade to.
+        total = jnp.sum(mask)
+        if obj.axis_name is not None:
+            total = jax.lax.psum(total, obj.axis_name)
+        H = jnp.where(total > 0, H, jnp.eye(data.dim, dtype=H.dtype))
     x = state.x - jnp.linalg.solve(H, g)
     d = data.dim
     m = SimpleMetrics(
         loss=obj.global_loss(x, data),
         grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
-        uplink_bits_per_client=payload_bits_array(
-            exact_payload_bits(d * d + d, word_bits(g))
+        uplink_bits_per_client=_bits_metric(
+            exact_payload_bits(d * d + d, word_bits(g)), obj, mask
         ),
     )
     return SimpleState(x=x, aux=state.aux, step=state.step + 1), m
@@ -157,7 +185,11 @@ def _solver(name, init_fn, step_fn, cfg):
     return engine.FederatedSolver(
         name=name,
         init=lambda obj, data, key, x0=None: init_fn(obj, data, cfg, x0),
-        step=lambda state, obj, data, **_axis_kw: step_fn(state, obj, data, cfg),
+        # Forward the participation mask; axis kwargs are swallowed (the
+        # baselines reach the mesh only through the axis-bound Objective).
+        step=lambda state, obj, data, mask=None, **_axis_kw: step_fn(
+            state, obj, data, cfg, mask=mask
+        ),
         client_fields=(),
     )
 

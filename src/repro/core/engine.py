@@ -38,6 +38,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import participation as participation_lib
 from repro.core.objectives import ClientDataset, Objective
 from repro.launch import mesh as mesh_lib
 from repro.sharding import api as sh_api
@@ -73,6 +74,62 @@ class FederatedSolver:
     client_fields: Tuple[str, ...] = ()
 
 
+def _registry() -> dict:
+    """name -> (factory(**hparams) -> FederatedSolver, config dataclass or
+    None). Hparams are validated against the config dataclass's fields
+    before construction, so typos surface as named errors instead of opaque
+    dataclass ``TypeError``s."""
+    from repro.core import baselines, fednew
+
+    return {
+        "fednew": (
+            lambda **hp: fednew.solver(fednew.FedNewConfig(**hp)),
+            fednew.FedNewConfig,
+        ),
+        "q-fednew": (
+            lambda **hp: fednew.solver(fednew.FedNewConfig(**hp)),
+            fednew.FedNewConfig,
+        ),
+        "fedgd": (
+            lambda **hp: baselines.fedgd_solver(baselines.FedGDConfig(**hp)),
+            baselines.FedGDConfig,
+        ),
+        "newton-zero": (
+            lambda **hp: baselines.newton_zero_solver(
+                baselines.NewtonZeroConfig(**hp)
+            ),
+            baselines.NewtonZeroConfig,
+        ),
+        "newton": (lambda **hp: baselines.newton_solver(), None),
+    }
+
+
+def canonical_solver_name(name: str) -> str:
+    return name.lower().replace("_", "-")
+
+
+def solver_names() -> Tuple[str, ...]:
+    """Registered solver names (canonical form), for error messages and the
+    declarative ``repro.api`` spec validation."""
+    return tuple(sorted(_registry()))
+
+
+def solver_hparam_names(name: str) -> Tuple[str, ...]:
+    """Valid hparam keys for a registered solver (the fields of its config
+    dataclass; empty for config-less solvers like ``newton``)."""
+    key = canonical_solver_name(name)
+    reg = _registry()
+    if key not in reg:
+        raise KeyError(
+            f"unknown solver {name!r}; registered solvers: "
+            f"{', '.join(sorted(reg))}"
+        )
+    _, cfg_cls = reg[key]
+    if cfg_cls is None:
+        return ()
+    return tuple(f.name for f in dataclasses.fields(cfg_cls))
+
+
 def get_solver(name: str, **hparams) -> FederatedSolver:
     """Solver registry: ``fednew`` / ``q-fednew`` (needs ``bits``) /
     ``fedgd`` / ``newton-zero`` / ``newton``. ``hparams`` feed the method's
@@ -85,21 +142,24 @@ def get_solver(name: str, **hparams) -> FederatedSolver:
     when ``pallas`` is forced off-TPU, jnp reference otherwise. The sharded
     driver composes with this: inside the ``shard_map`` region each device's
     kernel call sees its own ``(n_clients/n_devices, ...)`` tile."""
-    from repro.core import baselines, fednew
-
-    key = name.lower().replace("_", "-")
-    if key in ("fednew", "q-fednew"):
-        if key == "q-fednew" and not hparams.get("bits"):
-            raise ValueError("q-fednew requires bits=<int>")
-        return fednew.solver(fednew.FedNewConfig(**hparams))
-    if key == "fedgd":
-        return baselines.fedgd_solver(baselines.FedGDConfig(**hparams))
-    if key == "newton-zero":
-        return baselines.newton_zero_solver(baselines.NewtonZeroConfig(**hparams))
-    if key == "newton":
-        return baselines.newton_solver()
-    raise KeyError(f"unknown solver {name!r}; have fednew, q-fednew, fedgd, "
-                   "newton-zero, newton")
+    key = canonical_solver_name(name)
+    reg = _registry()
+    if key not in reg:
+        raise KeyError(
+            f"unknown solver {name!r}; registered solvers: "
+            f"{', '.join(sorted(reg))}"
+        )
+    factory, cfg_cls = reg[key]
+    valid = solver_hparam_names(key)
+    unknown = sorted(set(hparams) - set(valid))
+    if unknown:
+        raise TypeError(
+            f"solver {key!r} got unknown hparam(s) {unknown}; valid hparams: "
+            f"{list(valid) if valid else '<none>'}"
+        )
+    if key == "q-fednew" and not hparams.get("bits"):
+        raise ValueError("q-fednew requires bits=<int>")
+    return factory(**hparams)
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +180,7 @@ def run(
     mesh=None,
     axis_name: Optional[str] = None,
     donate: bool = True,
+    participation: Optional[participation_lib.Participation] = None,
 ):
     """Run ``rounds`` federated rounds; returns ``(final_state, metrics)``
     with every metric stacked to shape ``(rounds,)``.
@@ -128,12 +189,19 @@ def run(
     mode="host"  legacy one-jitted-step-per-round loop (bit-exact reference).
     mesh=...     shard the client axis across ``axis_name`` (default: the
                  mesh's first axis) and run scan blocks inside shard_map.
+    participation=Participation(fraction, kind, seed)
+                 per-round client sampling: the participation key rides in
+                 the scan carry, each round draws a global client mask, and
+                 the solver step aggregates/charges only the sampled clients.
+                 ``fraction=1.0`` (or None) is full participation — the
+                 original code path, bit for bit.
     """
     if rounds <= 0:
         raise ValueError("rounds must be positive")
     if mode not in ("scan", "host"):
         raise ValueError(f"unknown mode {mode!r}")
     key = jax.random.PRNGKey(0) if key is None else key
+    part = participation if (participation and participation.active) else None
     if mesh is not None:
         if mode != "scan":
             raise ValueError("mesh runs are always scan-compiled; drop mode="
@@ -141,18 +209,34 @@ def run(
         return _run_sharded(
             solver, obj, data, rounds, mesh,
             key=key, x0=x0, block_size=block_size,
-            axis_name=axis_name, donate=donate,
+            axis_name=axis_name, donate=donate, participation=part,
         )
 
     state = solver.init(obj, data, key, x0)
-    step1 = lambda s: solver.step(s, obj, data)
+    if part is None:
+        step1 = lambda s: solver.step(s, obj, data)
+        carry = state
+    else:
+        n = data.n_clients
+
+        def step1(c):
+            s, pkey = c
+            pkey, sub = participation_lib.split_round(pkey)
+            mask = participation_lib.round_mask(sub, n, part)
+            s, m = solver.step(s, obj, data, mask=mask)
+            return (s, pkey), m
+
+        carry = (state, part.init_key())
     if mode == "host":
-        return _host_loop(step1, state, rounds)
-    if donate:
-        # init() may alias caller arrays (the PRNG key, x0); donating those
-        # buffers into the first block would delete them under the caller.
-        state = jax.tree.map(jnp.copy, state)
-    return _scan_blocks(step1, state, rounds, block_size, donate)
+        carry, metrics = _host_loop(step1, carry, rounds)
+    else:
+        if donate:
+            # init() may alias caller arrays (the PRNG key, x0); donating
+            # those buffers into the first block would delete them under the
+            # caller.
+            carry = jax.tree.map(jnp.copy, carry)
+        carry, metrics = _scan_blocks(step1, carry, rounds, block_size, donate)
+    return (carry[0] if part is not None else carry), metrics
 
 
 def _host_loop(step1, state, rounds: int):
@@ -210,6 +294,7 @@ def _run_sharded(
     block_size,
     axis_name: Optional[str],
     donate: bool,
+    participation: Optional[participation_lib.Participation] = None,
 ):
     axis = axis_name or mesh.axis_names[0]
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -219,6 +304,8 @@ def _run_sharded(
             f"n_clients={n} must divide evenly over the {n_shards}-way "
             f"client axis {axis!r} (equal shards keep eq. 13 a plain pmean)"
         )
+    n_local = n // n_shards
+    part = participation
 
     # Round-0 state is built on the full dataset on the default device, then
     # laid out: per-client rows split over the client axis, rest replicated.
@@ -227,35 +314,52 @@ def _run_sharded(
         state = jax.tree.map(jnp.copy, state)  # don't donate caller aliases
     state_specs = sh.fed_state_specs(state, solver.client_fields, axis)
     data_specs = sh.fed_data_specs(data, axis)
-    state = jax.device_put(state, sh.shardings(state_specs, mesh))
+    if part is None:
+        carry, carry_specs = state, state_specs
+    else:
+        # The participation key rides in the carry, replicated: every shard
+        # draws the same global mask and slices out its own clients.
+        carry = (state, part.init_key())
+        carry_specs = (state_specs, sh.P())
+    carry = jax.device_put(carry, sh.shardings(carry_specs, mesh))
     data = jax.device_put(data, sh.shardings(data_specs, mesh))
 
     obj_ax = obj.with_axis(axis)
 
-    def block(s, d, length):
+    def block(c, d, length):
         def one(carry, _):
-            return solver.step(
-                carry, obj_ax, d, axis_name=axis, n_global_clients=n
+            if part is None:
+                return solver.step(
+                    carry, obj_ax, d, axis_name=axis, n_global_clients=n
+                )
+            s, pkey = carry
+            pkey, sub = participation_lib.split_round(pkey)
+            gmask = participation_lib.round_mask(sub, n, part)
+            lmask = participation_lib.shard_mask(gmask, axis, n_local)
+            s, m = solver.step(
+                s, obj_ax, d, axis_name=axis, n_global_clients=n, mask=lmask
             )
+            return (s, pkey), m
 
-        return jax.lax.scan(one, s, None, length=length)
+        return jax.lax.scan(one, c, None, length=length)
 
     @functools.lru_cache(maxsize=None)
     def jitted(length: int):
         body = sh_api.shard_map_compat(
             functools.partial(block, length=length),
             mesh,
-            in_specs=(state_specs, data_specs),
-            out_specs=(state_specs, sh.P()),
+            in_specs=(carry_specs, data_specs),
+            out_specs=(carry_specs, sh.P()),
             manual_axes=(axis,),
         )
         return jax.jit(body, donate_argnums=(0,) if donate else ())
 
     chunks = []
     for length in _block_plan(rounds, block_size):
-        state, m = jitted(length)(state, data)
+        carry, m = jitted(length)(carry, data)
         chunks.append(m)
-    return state, _concat_metrics(chunks)
+    final = carry[0] if part is not None else carry
+    return final, _concat_metrics(chunks)
 
 
 def run_sharded_on_host(
@@ -268,11 +372,15 @@ def run_sharded_on_host(
     """Convenience: run on a 1-D client mesh over whatever this host offers
     (one device on a laptop — the shard_map path with a size-1 axis, so the
     same code that runs on a pod is exercised everywhere)."""
-    n_dev = len(jax.devices())
-    n_use = 1
-    for k in range(n_dev, 0, -1):  # largest device count dividing n_clients
-        if data.n_clients % k == 0:
-            n_use = k
-            break
-    mesh = mesh_lib.make_client_mesh(n_use)
+    mesh = mesh_lib.make_client_mesh(auto_client_devices(data.n_clients))
     return run(solver, obj, data, rounds, mesh=mesh, **kw)
+
+
+def auto_client_devices(n_clients: int) -> int:
+    """Largest local device count that divides ``n_clients`` evenly (the
+    mesh size ``run_sharded_on_host`` and ``ScheduleSpec(mesh_devices=
+    "auto")`` use)."""
+    for k in range(len(jax.devices()), 0, -1):
+        if n_clients % k == 0:
+            return k
+    return 1

@@ -144,6 +144,24 @@ def _local_solve(chol, rhs, cfg: FedNewConfig):
     return jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(chol, rhs)
 
 
+def _mask_rows(mask, new, old):
+    """Per-client select: sampled clients take the new row, the rest keep
+    their stale state (lam, y_hat, cached factors)."""
+    m = mask.reshape(mask.shape + (1,) * (new.ndim - 1))
+    return jnp.where(m > 0, new, old)
+
+
+def _masked_bits(payload: int, mask, axis_name):
+    """Uplink metric under partial participation (see
+    ``participation.masked_bits_metric``); exact integer totals come from
+    ``participation.round_masks`` on the host."""
+    from repro.core import participation
+
+    return participation.masked_bits_metric(
+        payload_bits_array(payload), mask, axis_name
+    )
+
+
 def step(
     state: FedNewState,
     obj: Objective,
@@ -152,6 +170,7 @@ def step(
     *,
     axis_name: Optional[str] = None,
     n_global_clients: Optional[int] = None,
+    mask: Optional[jax.Array] = None,
 ):
     """One outer round of Algorithm 1 (optionally quantized).
 
@@ -161,6 +180,14 @@ def step(
     the client mesh axis, and ``n_global_clients`` (static, required on the
     Q-FedNew path) lets every shard derive the same per-client PRNG keys as
     the single-device run — sharding changes the schedule, not the math.
+
+    ``mask`` (a (n_local,) {0,1} participation mask from
+    ``repro.core.participation``) restricts the round to the sampled clients:
+    eq. 13 aggregates only their y_i, only they update lam/y_hat/cached
+    factors, and only they are charged uplink bits. ``mask=None`` is full
+    participation — the original code path, bit for bit. Loss/grad-norm
+    metrics always evaluate the *global* objective (evaluation is not
+    communication).
     """
     # Engine contract: a sharded caller passes an obj already bound to this
     # axis (with_axis is idempotent then); the rebind here covers direct
@@ -175,6 +202,9 @@ def step(
             lambda: _factorize(obj, state.x, data, cfg),
             lambda: state.chol,
         )
+        if mask is not None:
+            # Only sampled clients saw x^k; the rest keep the stale factor.
+            chol = _mask_rows(mask, chol, state.chol)
     else:
         chol = state.chol
 
@@ -184,13 +214,19 @@ def step(
         ap = admm.one_pass(
             g_i, state.lam, state.y, cfg.rho,
             lambda r: _local_solve(chol, r, cfg), axis_name=axis_name,
+            weights=mask,
         )
         y_i_tx, y, lam, y_hat = ap.y_i, ap.y, ap.lam, state.y_hat
         key = state.key
         # uplink = the full-precision y_i, at the width it is transmitted
-        bits = payload_bits_array(
-            exact_payload_bits(data.dim, word_bits(y_i_tx))
-        )
+        if mask is None:
+            bits = payload_bits_array(
+                exact_payload_bits(data.dim, word_bits(y_i_tx))
+            )
+        else:
+            bits = _masked_bits(
+                exact_payload_bits(data.dim, word_bits(y_i_tx)), mask, axis_name
+            )
     else:
         # Q-FedNew: solve eq. 9, quantize the transmitted vector, and run the
         # aggregation + dual update on the *quantized* y_i so that the
@@ -213,10 +249,19 @@ def step(
             keys, y_i, state.y_hat, cfg.bits,
             backend=cfg.resolved_quant_backend,
         )
-        y_i_tx, y_hat = qr.y_hat, qr.y_hat
-        y = admm.tree_mean_clients(y_i_tx, axis_name)
-        lam = state.lam + cfg.rho * (y_i_tx - y)
-        bits = payload_bits_array(payload_bits(cfg.bits, data.dim))
+        if mask is None:
+            y_i_tx, y_hat = qr.y_hat, qr.y_hat
+            y = admm.tree_mean_clients(y_i_tx, axis_name)
+            lam = state.lam + cfg.rho * (y_i_tx - y)
+            bits = payload_bits_array(payload_bits(cfg.bits, data.dim))
+        else:
+            # Sampled clients quantize and transmit; the rest keep their
+            # error-feedback state y_hat (they quantized nothing this round).
+            y_hat = _mask_rows(mask, qr.y_hat, state.y_hat)
+            y_i_tx = y_hat
+            y = admm.tree_mean_clients(y_i_tx, axis_name, weights=mask)
+            lam = admm.dual_update(state.lam, y_i_tx, y, cfg.rho, weights=mask)
+            bits = _masked_bits(payload_bits(cfg.bits, data.dim), mask, axis_name)
 
     x = state.x - y  # outer Newton step (eq. 14)
 

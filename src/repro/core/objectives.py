@@ -71,20 +71,27 @@ class Objective:
         """Shard-aware view of the same oracles (see class docstring)."""
         return dataclasses.replace(self, axis_name=axis_name)
 
-    def _agg(self, v: jax.Array) -> jax.Array:
-        v = jnp.mean(v, axis=0)
-        if self.axis_name is not None:
-            v = jax.lax.pmean(v, self.axis_name)
-        return v
+    def _agg(self, v: jax.Array, weights: jax.Array | None = None) -> jax.Array:
+        if weights is None:
+            v = jnp.mean(v, axis=0)
+            if self.axis_name is not None:
+                v = jax.lax.pmean(v, self.axis_name)
+            return v
+        # Weighted (participation-masked) aggregate: one definition of the
+        # masked mean for the whole repo — solver aggregation (eq. 13) and
+        # the objective oracles must never drift apart.
+        from repro.core import admm
 
-    def global_loss(self, x: jax.Array, data: ClientDataset) -> jax.Array:
-        return self._agg(self.local_loss(x, data))
+        return admm.tree_mean_clients(v, self.axis_name, weights=weights)
 
-    def global_grad(self, x: jax.Array, data: ClientDataset) -> jax.Array:
-        return self._agg(self.local_grad(x, data))
+    def global_loss(self, x, data: ClientDataset, weights=None) -> jax.Array:
+        return self._agg(self.local_loss(x, data), weights)
 
-    def global_hessian(self, x: jax.Array, data: ClientDataset) -> jax.Array:
-        return self._agg(self.local_hessian(x, data))
+    def global_grad(self, x, data: ClientDataset, weights=None) -> jax.Array:
+        return self._agg(self.local_grad(x, data), weights)
+
+    def global_hessian(self, x, data: ClientDataset, weights=None) -> jax.Array:
+        return self._agg(self.local_hessian(x, data), weights)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,145 @@
+"""Per-round partial client participation (cross-device FL sampling).
+
+The paper evaluates full participation, but the deployments FedNew targets —
+and the settings FedNL/FedNS benchmark against — sample a fraction of
+clients each round. This module owns the *sampling law*; the engine threads
+a per-round mask through ``lax.scan`` (the participation PRNG key rides in
+the scan carry) and the solver steps honor it:
+
+  * eq. 13's aggregation becomes a masked mean over the sampled clients
+    (``admm.tree_mean_clients(..., weights=mask)``), which under ``shard_map``
+    lowers to a ``psum`` of weighted partial sums — exact for any shard
+    layout, equal shard sizes or not;
+  * dual/ error-feedback state (lam_i, y_hat_i) and Hessian factors update
+    only for sampled clients — a client that sat the round out keeps its
+    stale state, exactly as a real offline device would;
+  * uplink bits are charged only to sampled clients: the per-round
+    ``uplink_bits_per_client`` metric is the payload scaled by the realized
+    participating fraction, and ``round_masks`` lets the host replay the
+    mask schedule to recover exact integer bit totals.
+
+``Participation(fraction=1.0)`` is *inert*: the engine detects it and takes
+the exact pre-participation code path, so full-participation runs are
+bit-identical to builds that predate this module.
+
+Two sampling laws:
+
+  * ``"bernoulli"`` — every client participates independently w.p.
+    ``fraction`` (the variance-bearing law; rounds can over/under-shoot,
+    including the empty round, which degenerates to y=0 / x unchanged);
+  * ``"fixed"``     — exactly ``max(1, round(fraction * n))`` clients,
+    uniformly without replacement (the FedAvg-style law).
+
+Sampling is deterministic per ``seed`` and *identical across schedules*:
+masks are always drawn for the full global client range from a replicated
+key, and sharded runs slice their local rows — the same device-count
+invariance trick the Q-FedNew quantizer keys use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("bernoulli", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Participation:
+    """Per-round client sampling law. ``fraction=1.0`` means full
+    participation and is treated by the engine as "no sampling at all"
+    (bit-exact legacy path)."""
+
+    fraction: float = 1.0
+    kind: str = "bernoulli"
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 < self.fraction <= 1.0):
+            raise ValueError(
+                f"participation fraction must be in (0, 1], got {self.fraction}"
+            )
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown participation kind {self.kind!r}; have {KINDS}"
+            )
+
+    @property
+    def active(self) -> bool:
+        return self.fraction < 1.0
+
+    def init_key(self) -> jax.Array:
+        return jax.random.PRNGKey(self.seed)
+
+    def fixed_count(self, n_clients: int) -> int:
+        """Clients per round under the ``"fixed"`` law."""
+        return max(1, int(round(self.fraction * n_clients)))
+
+
+def round_mask(key: jax.Array, n_clients: int, part: Participation) -> jax.Array:
+    """Draw one round's global client mask: ``(n_clients,)`` float32 in
+    {0, 1}. Traceable (used inside ``lax.scan`` / ``shard_map``)."""
+    if part.kind == "bernoulli":
+        return jax.random.bernoulli(key, part.fraction, (n_clients,)).astype(
+            jnp.float32
+        )
+    k = part.fixed_count(n_clients)
+    perm = jax.random.permutation(key, n_clients)
+    return (perm < k).astype(jnp.float32)
+
+
+def masked_bits_metric(payload_bits_value, mask, axis_name: Optional[str]):
+    """Per-client uplink metric under a participation mask: the exact
+    per-message payload (already lowered via ``payload_bits_array``) scaled
+    by the globally sampled fraction — only sampled clients transmit. The
+    single definition of the masked-bits convention; FedNew and the
+    baselines both charge through it."""
+    from repro.core import admm
+
+    frac = admm.tree_mean_clients(mask, axis_name)
+    return payload_bits_value.astype(frac.dtype) * frac
+
+
+def shard_mask(global_mask: jax.Array, axis_name: str, n_local: int) -> jax.Array:
+    """This shard's rows of a global mask inside a ``shard_map`` manual
+    region (same layout convention as the Q-FedNew per-client keys)."""
+    start = jax.lax.axis_index(axis_name) * n_local
+    return jax.lax.dynamic_slice_in_dim(global_mask, start, n_local)
+
+
+def split_round(pkey: jax.Array):
+    """One scan-carry step of the participation key schedule: returns
+    ``(next_carry_key, this_round_subkey)``. The single place the schedule
+    is defined — ``round_masks`` replays exactly this."""
+    pkey, sub = jax.random.split(pkey)
+    return pkey, sub
+
+
+def round_masks(
+    part: Participation, rounds: int, n_clients: int, key: Optional[jax.Array] = None
+) -> np.ndarray:
+    """Host-side replay of the engine's mask schedule: ``(rounds, n)`` in
+    {0, 1}. Deterministic per seed, bit-identical to the masks drawn inside
+    the compiled scan — the basis for exact integer uplink-bit accounting
+    and for pinning sampled-client trajectories in tests."""
+    pkey = part.init_key() if key is None else key
+    out = []
+    for _ in range(rounds):
+        pkey, sub = split_round(pkey)
+        out.append(np.asarray(round_mask(sub, n_clients, part)))
+    return np.stack(out) if out else np.zeros((0, n_clients), np.float32)
+
+
+def sampled_counts(
+    part: Optional[Participation], rounds: int, n_clients: int
+) -> list:
+    """Per-round sampled-client counts as Python ints (full participation —
+    or no participation — charges every client every round)."""
+    if part is None or not part.active:
+        return [n_clients] * rounds
+    masks = round_masks(part, rounds, n_clients)
+    return [int(m.sum()) for m in masks]

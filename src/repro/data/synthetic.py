@@ -67,6 +67,44 @@ def make_dataset(spec: DatasetSpec, key: jax.Array, dtype=jnp.float32) -> Client
     return ClientDataset(features=feats, labels=labels)
 
 
+def make_dirichlet_dataset(
+    spec: DatasetSpec, key: jax.Array, alpha: float = 0.5, dtype=jnp.float32
+) -> ClientDataset:
+    """Dirichlet label-skew partition (the non-IID law FedNL/FedNS-style
+    evaluations sample from): client i draws its class mix
+    p_i ~ Dir(alpha, alpha) over the two labels, then fills its m slots with
+    labels ~ Bernoulli(p_i) and class-conditional features. Small ``alpha``
+    gives near-single-class clients (strong heterogeneity: local Hessians
+    genuinely differ), large ``alpha`` recovers the IID mix.
+
+    Deterministic per ``key`` (seed-determinism is pinned in tests), same
+    (n, m, d) ``ClientDataset`` layout as :func:`make_dataset` — which this
+    function does NOT touch: old IID callers get byte-identical data.
+    """
+    if alpha <= 0:
+        raise ValueError(f"dirichlet alpha must be positive, got {alpha}")
+    n, m, d = spec.n_clients, spec.samples_per_client, spec.dim
+    k_prop, k_lab, k_feat, k_mask, k_w = jax.random.split(key, 5)
+
+    # Per-client class proportions: (n,) probability of the +1 label.
+    p_pos = jax.random.dirichlet(k_prop, jnp.full((2,), alpha), (n,))[:, 0]
+    p_pos = p_pos.astype(dtype)
+    labels = jnp.where(
+        jax.random.uniform(k_lab, (n, m), dtype) < p_pos[:, None], 1.0, -1.0
+    ).astype(dtype)
+
+    # Class-conditional features: noise around a shared class direction, so
+    # the logreg optimum is learnable and local curvature tracks the skew.
+    mu_vec = (spec.separation / jnp.sqrt(d)) * jax.random.normal(k_w, (d,), dtype)
+    feats = jax.random.normal(k_feat, (n, m, d), dtype) / jnp.sqrt(d)
+    feats = feats + labels[:, :, None] * mu_vec
+    if spec.sparse:
+        keep = jax.random.bernoulli(k_mask, 0.15, (n, m, d))
+        feats = jnp.where(keep, jnp.sign(feats) * (jnp.abs(feats) + 0.5), 0.0)
+    scales = jnp.logspace(0.0, spec.col_spread, d, dtype=dtype)
+    return ClientDataset(features=feats * scales, labels=labels)
+
+
 def make_quadratic_dataset(
     key: jax.Array, n_clients: int, dim: int, cond: float = 10.0, dtype=jnp.float32
 ) -> ClientDataset:

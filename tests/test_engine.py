@@ -90,11 +90,63 @@ def test_registry_rejects_unknown_and_unparameterized():
         engine.get_solver("q-fednew")  # bits is mandatory
 
 
+def test_registry_errors_name_solver_and_keys():
+    """Unknown hparams fail with the solver, the bad key, and the valid keys
+    in the message (not an opaque dataclass TypeError); the unknown-solver
+    KeyError enumerates the registry."""
+    with pytest.raises(TypeError, match=r"fednew.*rhoo.*valid hparams.*rho"):
+        engine.get_solver("fednew", rhoo=0.1)
+    with pytest.raises(TypeError, match=r"fedgd.*momentum.*lr"):
+        engine.get_solver("fedgd", momentum=0.9)
+    with pytest.raises(TypeError, match="newton"):
+        engine.get_solver("newton", lr=1.0)  # config-less solver: no hparams
+    with pytest.raises(KeyError) as ei:
+        engine.get_solver("sgd")
+    for name in engine.solver_names():
+        assert name in str(ei.value)
+    assert engine.solver_hparam_names("fedgd") == ("lr",)
+    assert engine.solver_hparam_names("newton") == ()
+
+
 def test_block_plan_covers_rounds_exactly():
     assert engine._block_plan(10, 4) == [4, 4, 2]
     assert engine._block_plan(8, 4) == [4, 4]
     assert engine._block_plan(3, None) == [3]
     assert sum(engine._block_plan(1000, 64)) == 1000
+
+
+def test_block_plan_edge_cases():
+    # block_size > rounds clamps to one full block
+    assert engine._block_plan(3, 64) == [3]
+    # block_size=1: one block per round
+    assert engine._block_plan(4, 1) == [1, 1, 1, 1]
+    # rounds=1 under any block size
+    assert engine._block_plan(1, None) == [1]
+    assert engine._block_plan(1, 64) == [1]
+    # degenerate block sizes are clamped, never zero/negative blocks
+    assert engine._block_plan(5, 0) == [5]
+
+
+@pytest.mark.parametrize("rounds,block", [(1, None), (4, 1), (3, 64)],
+                         ids=["rounds=1", "block=1", "block>rounds"])
+def test_run_edge_blocks_match_host(problem, rounds, block):
+    """Scan scheduling edge cases (single round, per-round blocks, oversized
+    block) reproduce the host loop on a cheap baseline."""
+    obj, data = problem
+    sol = engine.get_solver("fedgd", lr=2.0)
+    _, m_host = engine.run(sol, obj, data, rounds, key=KEY, mode="host")
+    _, m_scan = engine.run(sol, obj, data, rounds, key=KEY, block_size=block)
+    assert m_scan.loss.shape == (rounds,)
+    _assert_metrics_close(m_host, m_scan)
+
+
+def test_run_rejects_bad_rounds_and_mode(problem):
+    obj, data = problem
+    sol = engine.get_solver("fedgd", lr=2.0)
+    with pytest.raises(ValueError, match="rounds"):
+        engine.run(sol, obj, data, 0)
+    with pytest.raises(ValueError, match="mode"):
+        engine.run(sol, obj, data, 1, mode="vmap")
 
 
 def test_sharded_driver_rejects_uneven_client_split(problem):
