@@ -1,0 +1,154 @@
+"""Dense vs. matrix-free FedNew scaling sweep over the model dimension d.
+
+For each d the same logreg problem runs twice through ``repro.api``:
+
+  * ``hessian_repr="dense"``   — the paper-scale path: (n, d, d) Hessians,
+    cached Cholesky factors, O(n d^3) refresh compute;
+  * ``hessian_repr="matfree"`` — CG on closed-form HVPs: O(n d) state,
+    O(cg_iters n m d) compute, no d x d array anywhere.
+
+Dense legs whose *estimated* footprint exceeds the memory/compute budgets
+are skipped (recorded as such, with the estimates — that IS the result: past
+the budget only the matfree path exists). Timings separate ``compile_s``
+(first compiled block) from ``steady_wall_clock_s`` (every later block), so
+the per-round numbers are not polluted by trace+compile time; ``block_size=1``
+makes every round its own block.
+
+    PYTHONPATH=src python -m benchmarks.matfree_scaling \
+        [--dims 1000,10000,100000] [--rounds 4] [--out matfree_scaling.json]
+
+Writes the JSON artifact to ``benchmarks/out/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import save_json
+
+from repro import api
+
+FLOAT_BYTES = 4  # float32 sweep
+
+
+def dense_estimates(n: int, m: int, d: int) -> dict:
+    """Static cost model for one dense refresh: the (n, d, d) Hessian/factor
+    cache and the Gram-build + Cholesky flops."""
+    return {
+        "state_bytes": n * d * d * FLOAT_BYTES,
+        "refresh_flops": n * (2 * m * d * d + d * d * d / 3),
+    }
+
+
+def matfree_estimates(n: int, m: int, d: int, cg_iters: int) -> dict:
+    return {
+        "state_bytes": n * d * FLOAT_BYTES,
+        "solve_flops": cg_iters * n * 4 * m * d,  # two matvecs per HVP
+    }
+
+
+def build_spec(d: int, args, repr_: str) -> api.ExperimentSpec:
+    hparams = {
+        "rho": args.rho,
+        "alpha": args.alpha,
+        "hessian_period": 1,
+        "hessian_repr": repr_,
+    }
+    if repr_ == "matfree":
+        hparams["cg_iters"] = args.cg_iters
+        hparams["cg_tol"] = 1e-6
+    return api.ExperimentSpec(
+        name=f"matfree-scaling-d{d}-{repr_}",
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=api.PartitionSpec(
+            dataset="custom", n_clients=args.clients,
+            samples_per_client=args.samples, dim=d, seed=5,
+        ),
+        solver=api.SolverSpec("fednew", hparams),
+        # block_size=1: round 1 is the compile block, rounds 2..R are pure
+        # steady-state execution.
+        schedule=api.ScheduleSpec(rounds=args.rounds, block_size=1),
+    )
+
+
+def main(argv=()) -> None:
+    # default argv=(): the benchmarks.run harness calls main() bare and must
+    # not have this parser swallow its own --only flag from sys.argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dims", default="1000,10000,100000",
+                    help="comma-separated d values to sweep")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--samples", type=int, default=16)
+    ap.add_argument("--cg-iters", type=int, default=16)
+    ap.add_argument("--rho", type=float, default=1.0)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--max-dense-bytes", type=float, default=2e9,
+                    help="skip dense legs whose Hessian cache would exceed this")
+    ap.add_argument("--max-dense-flops", type=float, default=2e11,
+                    help="skip dense legs whose per-refresh flops would exceed this")
+    ap.add_argument("--out", default="matfree_scaling.json")
+    args = ap.parse_args(list(argv))
+    dims = [int(x) for x in args.dims.split(",")]
+
+    entries = []
+    for d in dims:
+        for repr_ in ("dense", "matfree"):
+            if repr_ == "dense":
+                est = dense_estimates(args.clients, args.samples, d)
+                skip = (est["state_bytes"] > args.max_dense_bytes
+                        or est["refresh_flops"] > args.max_dense_flops)
+            else:
+                est = matfree_estimates(args.clients, args.samples, d,
+                                        args.cg_iters)
+                skip = False
+            entry = {
+                "d": d,
+                "hessian_repr": repr_,
+                "n_clients": args.clients,
+                "samples_per_client": args.samples,
+                "estimates": est,
+            }
+            if skip:
+                entry["skipped"] = (
+                    f"estimated dense footprint over budget "
+                    f"(--max-dense-bytes {args.max_dense_bytes:.0e} / "
+                    f"--max-dense-flops {args.max_dense_flops:.0e})"
+                )
+                print(f"d={d:>7} {repr_:8s} SKIPPED "
+                      f"({est['state_bytes']/1e9:.2f} GB Hessian cache)")
+            else:
+                res = api.run(build_spec(d, args, repr_))
+                # block_size=1 guarantees a steady window for rounds >= 2;
+                # a rounds=1 sweep has none -> honest null, not 0.0
+                per_round = (
+                    res.steady_wall_clock_s / res.steady_rounds
+                    if res.steady_rounds else None
+                )
+                entry.update(
+                    compile_s=res.compile_s,
+                    steady_wall_clock_s=res.steady_wall_clock_s,
+                    steady_rounds=res.steady_rounds,
+                    steady_s_per_round=per_round,
+                    wall_clock_s=res.wall_clock_s,
+                    final_loss=res.final_loss,
+                )
+                print(f"d={d:>7} {repr_:8s} compile {res.compile_s:6.2f}s  "
+                      f"steady {(per_round or 0.0)*1e3:8.1f} ms/round  "
+                      f"state {est['state_bytes']/1e6:10.1f} MB  "
+                      f"loss {res.final_loss:.4f}")
+            entries.append(entry)
+
+    path = save_json(args.out, {
+        "sweep": "dense-vs-matfree",
+        "rounds": args.rounds,
+        "cg_iters": args.cg_iters,
+        "entries": entries,
+    })
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -67,7 +67,19 @@ def run_dataset(name: str, rounds: int = ROUNDS):
             "rounds_to_1e-6": rounds_to_gap(
                 res.metrics["loss"], f_star, GAP_TARGET
             ),
-            "us_per_round": res.wall_clock_s * 1e6 / rounds,
+            # Steady-state cost only: the first compiled block's trace +
+            # compile time is reported separately, not amortized into the
+            # per-round figure (it used to inflate it badly at few rounds).
+            # steady_rounds, not rounds-1: the compile block covers a whole
+            # scan block of rounds that are outside the steady window. A
+            # run that fits in one block has NO steady window — report null,
+            # not a fake 0.0.
+            "us_per_round": (
+                res.steady_wall_clock_s * 1e6 / res.steady_rounds
+                if res.steady_rounds else None
+            ),
+            "steady_rounds": res.steady_rounds,
+            "compile_s": res.compile_s,
         }
 
     return {"f_star": f_star, "curves": curves}
@@ -81,7 +93,9 @@ def main():
         for label, c in res["curves"].items():
             emit(
                 f"fig1/{name}/{label}",
-                c["us_per_round"],
+                # no steady window (run fit in one compiled block) -> 0.0 in
+                # the CSV; the JSON artifact keeps the honest null
+                c["us_per_round"] or 0.0,
                 f"rounds_to_1e-6={c['rounds_to_1e-6']};final_gap={c['gap'][-1]:.3e}",
             )
         # Claim checks (soft: report PASS/FAIL in the derived column).

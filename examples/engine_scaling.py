@@ -60,7 +60,18 @@ def main() -> None:
     for label, sched in schedules.items():
         res = api.run(dataclasses.replace(base, schedule=sched))
         results[label] = res
-        print(f"{label:28s} {res.wall_clock_s:7.2f}s total  "
+        # compile_s is the first dispatched block (trace+compile dominated);
+        # the per-round steady figure divides by steady_rounds, which the
+        # schedules cover differently (rounds-1 under host, rounds-block
+        # under scan) — never by the total round count.
+        if res.steady_rounds:
+            per_round = res.steady_wall_clock_s / res.steady_rounds
+            steady = f"{per_round * 1e3:7.2f} ms/round ({res.steady_rounds} rounds)"
+        else:
+            steady = "    n/a (single compiled block)"
+        print(f"{label:28s} compile {res.compile_s:6.2f}s  "
+              f"steady {steady}  "
+              f"total {res.wall_clock_s:6.2f}s  "
               f"final |grad| {res.metrics['grad_norm'][-1]:.2e}")
 
     ref = np.asarray(results["host loop (legacy)"].metrics["loss"])

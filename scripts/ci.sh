@@ -28,3 +28,13 @@ REPRO_KERNEL_BACKEND=pallas python -m pytest -x -q \
 mkdir -p benchmarks/out
 python -m repro.api examples/specs/quickstart.json \
     --out benchmarks/out/quickstart_runresult.json
+
+# x64 leg: the int64 bits_metric_dtype branch of the exact uplink ledger is
+# dead code under default-f32 CI. Re-run the quantization/ledger suites with
+# x64 enabled, then push one float64 spec through the CLI (which flips x64
+# itself) so 64-bit word accounting and the JSON int ledger are exercised
+# end to end.
+JAX_ENABLE_X64=1 python -m pytest -x -q \
+    tests/test_quantization.py tests/test_api.py
+python -m repro.api examples/specs/float64_smoke.json \
+    --out benchmarks/out/float64_runresult.json

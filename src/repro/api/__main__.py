@@ -72,7 +72,9 @@ def main(argv=None) -> int:
              if "gap" in result.metrics else ""))
     print(f"uplink      {result.cumulative_uplink_bits_per_client[-1] / 8e6:.3f} "
           "MB/client cumulative (exact ledger)")
-    print(f"wall clock  {result.wall_clock_s:.2f}s")
+    print(f"wall clock  {result.wall_clock_s:.2f}s "
+          f"(compile {result.compile_s:.2f}s, "
+          f"steady {result.steady_wall_clock_s:.2f}s)")
 
     out = args.out or spec.telemetry.save_path
     if out:

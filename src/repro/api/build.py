@@ -84,6 +84,21 @@ def build_solver(spec: SolverSpec) -> engine.FederatedSolver:
     return engine.get_solver(spec.name, **spec.hparams)
 
 
+def check_solver_objective(spec: ExperimentSpec, obj: objectives.Objective):
+    """Cross-section validation the frozen specs can't do alone: the
+    matrix-free solve path needs an objective that ships a ``local_hvp``
+    oracle (both built-in kinds do; this guards future objective kinds and
+    hand-built ``run_components`` objectives routed through specs)."""
+    if (
+        spec.solver.hparams.get("hessian_repr") == "matfree"
+        and not obj.has_hvp
+    ):
+        raise ValueError(
+            f"solver hparams ask for hessian_repr='matfree' but the "
+            f"{spec.objective.kind!r} objective provides no local_hvp oracle"
+        )
+
+
 def build_mesh(spec: ScheduleSpec, n_clients: int):
     """None, or the 1-D client mesh the schedule asks for."""
     if spec.mesh_devices is None:

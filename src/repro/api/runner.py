@@ -30,6 +30,24 @@ from repro.core.quantization import (
 )
 
 
+class LedgerJSONEncoder(json.JSONEncoder):
+    """Strict encoder for RunResult payloads: numpy integers serialize as
+    JSON ints (the exact uplink ledger must never round through a float —
+    lossy past 2^53), numpy floats as floats, and anything else json can't
+    already handle raises instead of silently degrading."""
+
+    def default(self, o):
+        if isinstance(o, np.integer):
+            return int(o)
+        if isinstance(o, np.floating):
+            return float(o)
+        raise TypeError(
+            f"RunResult JSON refuses to guess a representation for "
+            f"{type(o).__name__!r} (exact-ledger fields must stay ints); "
+            f"convert it explicitly before saving"
+        )
+
+
 @dataclasses.dataclass
 class RunResult:
     """Everything one experiment produced, JSON-able as-is.
@@ -46,6 +64,21 @@ class RunResult:
     cumulative_uplink_bits_per_client  the paper's x-axis: cumulative mean
                                      uplink bits per client (floats; exact
                                      division of the int ledger).
+    wall_clock_s                     total run wall clock (= compile_s +
+                                     steady_wall_clock_s).
+    compile_s / compile_rounds       wall clock and round count of the
+                                     FIRST dispatched block/step —
+                                     dominated by trace + compile time.
+    steady_wall_clock_s / steady_rounds  wall clock and round count of
+                                     every subsequent dispatch: per-round
+                                     steady cost is steady_wall_clock_s /
+                                     steady_rounds — never divide by the
+                                     spec's total rounds, the compile
+                                     block's rounds are not in the steady
+                                     window. (A distinct tail block adds
+                                     its own smaller compile here; size
+                                     blocks to divide rounds when that
+                                     matters.)
     """
 
     spec: Dict[str, Any]
@@ -59,6 +92,10 @@ class RunResult:
     cumulative_uplink_bits_total: List[int]
     cumulative_uplink_bits_per_client: List[float]
     wall_clock_s: float
+    compile_s: float = 0.0
+    steady_wall_clock_s: float = 0.0
+    compile_rounds: int = 0
+    steady_rounds: int = 0
     f_star: Optional[float] = None
 
     @property
@@ -72,7 +109,7 @@ class RunResult:
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
         with open(path, "w") as f:
-            json.dump(self.to_dict(), f, indent=2, default=float)
+            json.dump(self.to_dict(), f, indent=2, cls=LedgerJSONEncoder)
         return path
 
 
@@ -112,11 +149,13 @@ def run(spec: ExperimentSpec) -> RunResult:
     assemble the result. Deterministic per the spec's three seeds (dataset /
     run / participation)."""
     obj, data = build.build_problem(spec)
+    build.check_solver_objective(spec, obj)
     solver = build.build_solver(spec.solver)
     mesh = build.build_mesh(spec.schedule, data.n_clients)
     part = build.build_participation(spec)
     sched = spec.schedule
 
+    timings: List = []
     t0 = time.perf_counter()
     state, metrics = engine.run(
         solver, obj, data, sched.rounds,
@@ -125,9 +164,18 @@ def run(spec: ExperimentSpec) -> RunResult:
         block_size=sched.block_size,
         mesh=mesh,
         participation=part,
+        timings=timings,
     )
     jax.block_until_ready(metrics)
     wall = time.perf_counter() - t0
+    # First dispatch carries trace+compile; the rest is steady-state. The
+    # round counts ride along so consumers can form per-round figures
+    # (compile covers block_size rounds under scan, 1 under host). See the
+    # RunResult docstring for the tail-block caveat.
+    compile_s = timings[0][1] if timings else 0.0
+    compile_rounds = timings[0][0] if timings else 0
+    steady_s = sum(t for _, t in timings[1:])
+    steady_rounds = sum(r for r, _ in timings[1:])
 
     metric_lists = {
         name: [float(v) for v in np.asarray(vals)]
@@ -171,6 +219,10 @@ def run(spec: ExperimentSpec) -> RunResult:
         cumulative_uplink_bits_total=cumulative,
         cumulative_uplink_bits_per_client=[c / n for c in cumulative],
         wall_clock_s=wall,
+        compile_s=compile_s,
+        steady_wall_clock_s=steady_s,
+        compile_rounds=compile_rounds,
+        steady_rounds=steady_rounds,
         f_star=f_star,
     )
     if spec.telemetry.save_path:

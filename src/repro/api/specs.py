@@ -144,22 +144,20 @@ class SolverSpec:
     hparams: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
-        canonical = engine.canonical_solver_name(self.name)
-        if canonical not in engine.solver_names():
-            raise ValueError(
-                f"unknown solver {self.name!r}; registered solvers: "
-                f"{', '.join(engine.solver_names())}"
-            )
-        object.__setattr__(self, "name", canonical)
+        object.__setattr__(
+            self, "name", engine.canonical_solver_name(self.name)
+        )
         object.__setattr__(self, "hparams", dict(self.hparams))
-        valid = engine.solver_hparam_names(canonical)
-        unknown = sorted(set(self.hparams) - set(valid))
-        if unknown:
-            raise ValueError(
-                f"solver {canonical!r}: unknown hparam(s) {unknown}; "
-                f"valid hparams: {list(valid) if valid else '<none>'}"
-            )
-        if canonical == "q-fednew" and not self.hparams.get("bits"):
+        # ONE validation path shared with engine.get_solver — names and
+        # values (enum strings like hessian_repr, positivity of cg_iters)
+        # both fail at spec build. The spec layer's contract is that bad
+        # construction raises ValueError, so the engine's KeyError/TypeError
+        # are re-raised as such with their messages intact.
+        try:
+            engine.validate_solver_hparams(self.name, **self.hparams)
+        except (KeyError, TypeError) as e:
+            raise ValueError(e.args[0] if e.args else str(e)) from None
+        if self.name == "q-fednew" and not self.hparams.get("bits"):
             raise ValueError("solver 'q-fednew' requires hparams['bits']")
 
 
@@ -207,8 +205,8 @@ class ParticipationSpec:
 
     fraction=1.0 is full participation and reproduces pre-API trajectories
     bit-exactly; fraction<1.0 samples clients per round (``"bernoulli"``:
-    independent coin flips, ``"fixed"``: exactly round(fraction*n) clients),
-    deterministic per ``seed``.
+    independent coin flips, ``"fixed"``: exactly ceil(fraction*n) clients —
+    never fewer than the asked-for fraction), deterministic per ``seed``.
     """
 
     fraction: float = 1.0

@@ -13,9 +13,10 @@ and FedNew takes exactly ONE pass of standard ADMM on it per outer round:
 
 This module owns the *structure* (aggregation, dual update, invariants) and is
 generic over how the client sub-problem (eq. 9) is solved: the faithful path
-supplies a cached Cholesky solve, FedNew-HF supplies matrix-free CG on HVPs,
-and both operate on arbitrary pytrees so the same code serves d=99 logistic
-regression and 10^11-parameter language models.
+supplies a cached Cholesky solve, ``hessian_repr="matfree"`` supplies batched
+CG on closed-form HVPs (``hvp.cg_solve_clients``), FedNew-HF supplies
+matrix-free CG on pytree HVPs — all operate on arbitrary pytrees so the same
+code serves d=99 logistic regression and 10^11-parameter language models.
 """
 
 from __future__ import annotations

@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional, Tuple
+import time
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -130,6 +131,25 @@ def solver_hparam_names(name: str) -> Tuple[str, ...]:
     return tuple(f.name for f in dataclasses.fields(cfg_cls))
 
 
+def validate_solver_hparams(name: str, **hparams) -> None:
+    """Value-level hparam validation: construct (and discard) the solver's
+    config dataclass so its ``__post_init__`` checks (enum strings like
+    ``hessian_repr``, positivity of ``cg_iters``, backend names) fire at
+    spec-build time instead of three layers down. Unknown names/solvers
+    raise the same errors as :func:`get_solver`."""
+    key = canonical_solver_name(name)
+    valid = solver_hparam_names(key)  # raises KeyError on unknown solver
+    unknown = sorted(set(hparams) - set(valid))
+    if unknown:
+        raise TypeError(
+            f"solver {key!r} got unknown hparam(s) {unknown}; valid hparams: "
+            f"{list(valid) if valid else '<none>'}"
+        )
+    _, cfg_cls = _registry()[key]
+    if cfg_cls is not None:
+        cfg_cls(**hparams)
+
+
 def get_solver(name: str, **hparams) -> FederatedSolver:
     """Solver registry: ``fednew`` / ``q-fednew`` (needs ``bits``) /
     ``fedgd`` / ``newton-zero`` / ``newton``. ``hparams`` feed the method's
@@ -141,24 +161,20 @@ def get_solver(name: str, **hparams) -> FederatedSolver:
     kernels via ``repro.kernels.dispatch`` — compiled on TPU, interpret mode
     when ``pallas`` is forced off-TPU, jnp reference otherwise. The sharded
     driver composes with this: inside the ``shard_map`` region each device's
-    kernel call sees its own ``(n_clients/n_devices, ...)`` tile."""
+    kernel call sees its own ``(n_clients/n_devices, ...)`` tile.
+
+    ``hessian_repr="matfree"`` (+ ``cg_iters``/``cg_tol``) switches the
+    eq. 9 solve to CG on the objective's closed-form HVPs: no ``(n, d, d)``
+    Hessian is ever built, per-client state is O(d), and the scan/shard_map
+    schedules are unchanged (CG is pure tree ops; eq. 13 aggregation and the
+    metric collectives are untouched)."""
     key = canonical_solver_name(name)
-    reg = _registry()
-    if key not in reg:
-        raise KeyError(
-            f"unknown solver {name!r}; registered solvers: "
-            f"{', '.join(sorted(reg))}"
-        )
-    factory, cfg_cls = reg[key]
-    valid = solver_hparam_names(key)
-    unknown = sorted(set(hparams) - set(valid))
-    if unknown:
-        raise TypeError(
-            f"solver {key!r} got unknown hparam(s) {unknown}; valid hparams: "
-            f"{list(valid) if valid else '<none>'}"
-        )
+    # One validation path for spec-build time and solver-build time: unknown
+    # solvers/hparams and bad values raise identical, named errors.
+    validate_solver_hparams(key, **hparams)
     if key == "q-fednew" and not hparams.get("bits"):
         raise ValueError("q-fednew requires bits=<int>")
+    factory, _ = _registry()[key]
     return factory(**hparams)
 
 
@@ -181,6 +197,7 @@ def run(
     axis_name: Optional[str] = None,
     donate: bool = True,
     participation: Optional[participation_lib.Participation] = None,
+    timings: Optional[List[Tuple[int, float]]] = None,
 ):
     """Run ``rounds`` federated rounds; returns ``(final_state, metrics)``
     with every metric stacked to shape ``(rounds,)``.
@@ -195,6 +212,14 @@ def run(
                  the solver step aggregates/charges only the sampled clients.
                  ``fraction=1.0`` (or None) is full participation — the
                  original code path, bit for bit.
+    timings=[]   pass a list to receive one ``(rounds_in_call, seconds)``
+                 entry per dispatched jit call (per block under scan, per
+                 round under host), each blocked to completion before the
+                 clock stops. The first entry of a fresh run includes trace
+                 + compile time; callers split compile from steady-state
+                 cost with it (``repro.api`` reports ``compile_s`` vs
+                 ``steady_wall_clock_s``). ``None`` (default) adds no
+                 synchronization at all.
     """
     if rounds <= 0:
         raise ValueError("rounds must be positive")
@@ -210,6 +235,7 @@ def run(
             solver, obj, data, rounds, mesh,
             key=key, x0=x0, block_size=block_size,
             axis_name=axis_name, donate=donate, participation=part,
+            timings=timings,
         )
 
     state = solver.init(obj, data, key, x0)
@@ -228,23 +254,35 @@ def run(
 
         carry = (state, part.init_key())
     if mode == "host":
-        carry, metrics = _host_loop(step1, carry, rounds)
+        carry, metrics = _host_loop(step1, carry, rounds, timings)
     else:
         if donate:
             # init() may alias caller arrays (the PRNG key, x0); donating
             # those buffers into the first block would delete them under the
             # caller.
             carry = jax.tree.map(jnp.copy, carry)
-        carry, metrics = _scan_blocks(step1, carry, rounds, block_size, donate)
+        carry, metrics = _scan_blocks(
+            step1, carry, rounds, block_size, donate, timings
+        )
     return (carry[0] if part is not None else carry), metrics
 
 
-def _host_loop(step1, state, rounds: int):
+def _timed(call, n_rounds: int, timings):
+    """Run one dispatched jit call, optionally timing it to completion."""
+    if timings is None:
+        return call()
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(call())
+    timings.append((n_rounds, time.perf_counter() - t0))
+    return out
+
+
+def _host_loop(step1, state, rounds: int, timings=None):
     """The historical driver, verbatim: jit one step, iterate on the host."""
     jstep = jax.jit(step1)
     history = []
     for _ in range(rounds):
-        state, m = jstep(state)
+        state, m = _timed(lambda: jstep(state), 1, timings)
         history.append(m)
     return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)
 
@@ -263,7 +301,8 @@ def _concat_metrics(chunks):
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
 
 
-def _scan_blocks(step1, state, rounds: int, block_size, donate: bool):
+def _scan_blocks(step1, state, rounds: int, block_size, donate: bool,
+                 timings=None):
     def block(s, length):
         return jax.lax.scan(lambda c, _: step1(c), s, None, length=length)
 
@@ -272,7 +311,7 @@ def _scan_blocks(step1, state, rounds: int, block_size, donate: bool):
     )
     chunks = []
     for n in _block_plan(rounds, block_size):
-        state, m = jblock(state, n)
+        state, m = _timed(lambda: jblock(state, n), n, timings)
         chunks.append(m)
     return state, _concat_metrics(chunks)
 
@@ -295,6 +334,7 @@ def _run_sharded(
     axis_name: Optional[str],
     donate: bool,
     participation: Optional[participation_lib.Participation] = None,
+    timings=None,
 ):
     axis = axis_name or mesh.axis_names[0]
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -356,7 +396,9 @@ def _run_sharded(
 
     chunks = []
     for length in _block_plan(rounds, block_size):
-        carry, m = jitted(length)(carry, data)
+        carry, m = _timed(
+            lambda: jitted(length)(carry, data), length, timings
+        )
         chunks.append(m)
     final = carry[0] if part is not None else carry
     return final, _concat_metrics(chunks)

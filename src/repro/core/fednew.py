@@ -4,12 +4,33 @@ State layout mirrors Algorithm 1:
   x      (d,)      global model at the PS (broadcast each round)
   y      (d,)      previous global direction y^{k-1}
   lam    (n, d)    per-client dual variables
-  chol   (n, d, d) cached Cholesky factors of (H_i + (alpha+rho) I)
+  curv   per-client curvature cache; representation depends on the config:
+           hessian_repr="dense"   (n, d, d) cached Cholesky factors of
+                                  (H_i + (alpha+rho) I) (reference solve),
+                                  or the raw H_i (Pallas CG kernel)
+           hessian_repr="matfree" (n, d) per-client Hessian *anchor points* —
+                                  the iterate each client's curvature is
+                                  evaluated at; no d x d array ever exists
   y_hat  (n, d)    per-client previously-quantized vectors (Q-FedNew only)
 
 The Hessian refresh rate r from the experiments maps to ``hessian_period``:
 r=1 -> 1, r=0.1 -> 10, r=0 -> 0 (never refresh; factor from x^0 is kept —
 the computation-efficient "zeroth Hessian" variant, one factorization ever).
+
+``hessian_repr`` selects how the eq. 9 client sub-problem
+``(H_i + (alpha+rho) I) y_i = rhs_i`` is solved:
+
+  "dense"   (default) materialize H_i once per refresh and cache a Cholesky
+            factor (or the raw Hessian on the Pallas kernel path) — exact,
+            O(n d^2) memory / O(n d^3) refresh compute; the paper-scale path,
+            bit-identical to builds that predate ``hessian_repr``.
+  "matfree" never build H_i: solve with damped conjugate gradients
+            (``hvp.cg_solve_clients``) where each matvec is the objective's
+            closed-form batched HVP (``Objective.local_hvp``) at the cached
+            per-client anchor. O(n d) state, O(cg_iters n m d) compute — the
+            only path that survives d ~ 1e5+. ``cg_iters``/``cg_tol`` bound
+            the inner iteration; run to convergence (tol ~ 1e-7, generous
+            iters) the trajectory matches "dense" to solver tolerance.
 
 Communication accounting follows the paper: the metric of record is uplink
 bits per client per round — w·d for FedNew (w = word bits of the transmitted
@@ -35,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
-from repro.core import admm
+from repro.core import admm, hvp
 from repro.core.objectives import ClientDataset, Objective
 from repro.core.quantization import (
     exact_payload_bits,
@@ -44,6 +65,9 @@ from repro.core.quantization import (
     word_bits,
 )
 from repro.kernels import dispatch
+
+
+HESSIAN_REPRS = ("dense", "matfree")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,11 +80,32 @@ class FedNewConfig:
     backend: str = "auto"  # "auto" | "pallas" | "reference" (both hot loops)
     solve_backend: Optional[str] = None  # per-loop override, eq. 9
     quant_backend: Optional[str] = None  # per-loop override, eqs. 25-30
+    hessian_repr: str = "dense"  # "dense" | "matfree" (see module docstring)
+    cg_iters: int = 32  # matfree: CG iterations for the eq. 9 solve
+    cg_tol: float = 0.0  # matfree: per-client residual-norm early exit (0 = off)
 
     def __post_init__(self):
         for b in (self.backend, self.solve_backend, self.quant_backend):
             if b is not None:
                 dispatch.validate_backend(b)
+        if self.hessian_repr not in HESSIAN_REPRS:
+            raise ValueError(
+                f"unknown hessian_repr {self.hessian_repr!r}; "
+                f"expected one of {HESSIAN_REPRS}"
+            )
+        if self.cg_iters < 1:
+            raise ValueError(f"cg_iters must be >= 1, got {self.cg_iters}")
+        if self.cg_tol < 0:
+            raise ValueError(f"cg_tol must be >= 0, got {self.cg_tol}")
+        if self.hessian_repr == "matfree" and (
+            self.use_kernel or self.solve_backend == "pallas"
+        ):
+            raise ValueError(
+                "hessian_repr='matfree' solves eq. 9 with CG on HVPs and "
+                "never builds the (n, d, d) Hessians the Pallas client_solve "
+                "kernel consumes; drop use_kernel/solve_backend='pallas' "
+                "(backend= still routes the quantizer)"
+            )
 
     @property
     def damping(self) -> float:
@@ -79,10 +124,17 @@ class FedNewConfig:
         return self.quant_backend if self.quant_backend is not None else self.backend
 
     @property
+    def matfree(self) -> bool:
+        return self.hessian_repr == "matfree"
+
+    @property
     def solve_uses_kernel(self) -> bool:
         """Static (trace-time) routing decision for the eq. 9 solve; also
-        decides whether state.chol caches Cholesky factors (reference) or
-        raw Hessians (the CG kernel applies the damping itself)."""
+        decides whether state.curv caches Cholesky factors (reference) or
+        raw Hessians (the CG kernel applies the damping itself). Matfree
+        mode is kernel-free by construction (pure tree ops)."""
+        if self.matfree:
+            return False
         return dispatch.use_pallas(
             dispatch.resolve_backend(self.resolved_solve_backend)
         )
@@ -92,7 +144,7 @@ class FedNewState(NamedTuple):
     x: jax.Array
     y: jax.Array
     lam: jax.Array
-    chol: jax.Array
+    curv: jax.Array  # per-client curvature cache; layout per FedNewConfig
     y_hat: jax.Array
     key: jax.Array
     step: jax.Array
@@ -116,9 +168,27 @@ def _factorize(obj: Objective, x, data, cfg: FedNewConfig):
     return jax.vmap(lambda M: jsl.cholesky(M, lower=True))(damped)
 
 
+def _check_matfree(obj: Objective, cfg: FedNewConfig) -> None:
+    if cfg.matfree and not obj.has_hvp:
+        raise ValueError(
+            "hessian_repr='matfree' needs an Objective with a local_hvp "
+            "oracle (objectives.logistic_regression / objectives.quadratic "
+            "provide closed-form ones); this objective has none"
+        )
+
+
+def _fresh_curv(obj: Objective, x, data, cfg: FedNewConfig, n_local: int):
+    """The curvature cache a client that saw iterate ``x`` would hold:
+    factors/Hessians in dense mode, the anchor point itself in matfree."""
+    if cfg.matfree:
+        return jnp.broadcast_to(x, (n_local,) + x.shape)
+    return _factorize(obj, x, data, cfg)
+
+
 def init(
     obj: Objective, data: ClientDataset, cfg: FedNewConfig, key: jax.Array, x0=None
 ) -> FedNewState:
+    _check_matfree(obj, cfg)
     d = data.dim
     n = data.n_clients
     dtype = data.features.dtype if data.features.dtype in (jnp.float32, jnp.float64) else jnp.float32
@@ -127,21 +197,31 @@ def init(
         x=x,
         y=jnp.zeros((d,), dtype),
         lam=jnp.zeros((n, d), dtype),
-        chol=_factorize(obj, x, data, cfg),
+        curv=_fresh_curv(obj, x, data, cfg, n),
         y_hat=jnp.zeros((n, d), dtype),
         key=key,
         step=jnp.zeros((), jnp.int32),
     )
 
 
-def _local_solve(chol, rhs, cfg: FedNewConfig):
+def _local_solve(curv, rhs, cfg: FedNewConfig, obj=None, data=None):
     """(H_i + (alpha+rho) I)^{-1} rhs, batched over clients (eq. 9)."""
+    if cfg.matfree:
+        # `curv` holds per-client anchor points; each CG matvec is one call
+        # to the batched closed-form HVP — H_i never exists as a matrix.
+        return hvp.cg_solve_clients(
+            lambda v: obj.local_hvp(curv, data, v),
+            rhs,
+            damping=cfg.damping,
+            iters=cfg.cg_iters,
+            tol=cfg.cg_tol,
+        ).x
     if cfg.solve_uses_kernel:
-        # `chol` holds the raw Hessians on this path (see _factorize)
+        # `curv` holds the raw Hessians on this path (see _factorize)
         return dispatch.client_solve(
-            chol, rhs, damping=cfg.damping, backend=cfg.resolved_solve_backend
+            curv, rhs, damping=cfg.damping, backend=cfg.resolved_solve_backend
         )
-    return jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(chol, rhs)
+    return jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(curv, rhs)
 
 
 def _mask_rows(mask, new, old):
@@ -175,7 +255,7 @@ def step(
     """One outer round of Algorithm 1 (optionally quantized).
 
     With ``axis_name`` the round runs inside a ``shard_map`` manual region:
-    ``data`` and the per-client state rows (lam/chol/y_hat) hold only this
+    ``data`` and the per-client state rows (lam/curv/y_hat) hold only this
     shard's clients, eq. 13 and the metric aggregates become collectives over
     the client mesh axis, and ``n_global_clients`` (static, required on the
     Q-FedNew path) lets every shard derive the same per-client PRNG keys as
@@ -194,26 +274,28 @@ def step(
     # callers, whose metrics would otherwise silently aggregate shard-local.
     if axis_name is not None:
         obj = obj.with_axis(axis_name)
+    _check_matfree(obj, cfg)
+    n_local = state.lam.shape[0]
     # -- local Hessian refresh (pure client-side compute; no communication) --
     if cfg.hessian_period > 0:
         refresh = (state.step % cfg.hessian_period) == 0
-        chol = jax.lax.cond(
+        curv = jax.lax.cond(
             refresh,
-            lambda: _factorize(obj, state.x, data, cfg),
-            lambda: state.chol,
+            lambda: _fresh_curv(obj, state.x, data, cfg, n_local),
+            lambda: state.curv,
         )
         if mask is not None:
             # Only sampled clients saw x^k; the rest keep the stale factor.
-            chol = _mask_rows(mask, chol, state.chol)
+            curv = _mask_rows(mask, curv, state.curv)
     else:
-        chol = state.chol
+        curv = state.curv
 
     g_i = obj.local_grad(state.x, data)  # (n, d) — never transmitted
 
     if cfg.bits is None:
         ap = admm.one_pass(
             g_i, state.lam, state.y, cfg.rho,
-            lambda r: _local_solve(chol, r, cfg), axis_name=axis_name,
+            lambda r: _local_solve(curv, r, cfg, obj, data), axis_name=axis_name,
             weights=mask,
         )
         y_i_tx, y, lam, y_hat = ap.y_i, ap.y, ap.lam, state.y_hat
@@ -232,7 +314,7 @@ def step(
         # aggregation + dual update on the *quantized* y_i so that the
         # sum-lambda invariant is preserved (clients know their own y_hat).
         rhs = admm.admm_rhs(g_i, state.lam, jnp.broadcast_to(state.y, g_i.shape), cfg.rho)
-        y_i = _local_solve(chol, rhs, cfg)
+        y_i = _local_solve(curv, rhs, cfg, obj, data)
         key, sub = jax.random.split(state.key)
         n_local = y_i.shape[0]
         if axis_name is None:
@@ -266,7 +348,7 @@ def step(
     x = state.x - y  # outer Newton step (eq. 14)
 
     new_state = FedNewState(
-        x=x, y=y, lam=lam, chol=chol, y_hat=y_hat, key=key, step=state.step + 1
+        x=x, y=y, lam=lam, curv=curv, y_hat=y_hat, key=key, step=state.step + 1
     )
     metrics = StepMetrics(
         loss=obj.global_loss(x, data),
@@ -287,7 +369,7 @@ def solver(cfg: FedNewConfig):
         name=name,
         init=lambda obj, data, key, x0=None: init(obj, data, cfg, key, x0),
         step=lambda state, obj, data, **axis_kw: step(state, obj, data, cfg, **axis_kw),
-        client_fields=("lam", "chol", "y_hat"),
+        client_fields=("lam", "curv", "y_hat"),
     )
 
 

@@ -52,6 +52,16 @@ class Objective:
     local_loss(x, data)    -> (n,)
     local_grad(x, data)    -> (n, d)
     local_hessian(x, data) -> (n, d, d)
+    local_hvp(x, data, v)  -> (n, d)   [optional]
+
+    ``local_hvp`` is the matrix-free counterpart of ``local_hessian``: it
+    applies every client's Hessian to a per-client vector batch without ever
+    materializing a ``(d, d)`` block. Unlike the other oracles it takes a
+    *per-client* anchor batch ``x: (n, d)`` — FedNew's Hessian-refresh rate
+    means offline/stale clients keep curvature anchored at an older iterate,
+    so each client may differentiate at its own point. Solvers that need it
+    (``hessian_repr="matfree"``) check :attr:`has_hvp` and fail loudly when
+    an objective doesn't provide one.
 
     ``axis_name`` makes the ``global_*`` aggregates mesh-aware: inside a
     ``shard_map`` manual region where ``data`` holds only this shard's
@@ -65,7 +75,13 @@ class Objective:
     local_loss: Callable
     local_grad: Callable
     local_hessian: Callable
+    local_hvp: Callable | None = None
     axis_name: str | None = None
+
+    @property
+    def has_hvp(self) -> bool:
+        """True when the matrix-free ``local_hvp`` oracle is available."""
+        return self.local_hvp is not None
 
     def with_axis(self, axis_name: str | None) -> "Objective":
         """Shard-aware view of the same oracles (see class docstring)."""
@@ -120,14 +136,26 @@ def _logreg_hessian_1(x, A, b, mu):
     return H + mu * jnp.eye(A.shape[1], dtype=A.dtype)
 
 
+def _logreg_hvp_1(x, v, A, b, mu):
+    """H(x) v = A^T (D (A v)) / m + mu v — two matvecs and a diagonal scale,
+    O(m d) time and memory; the (d, d) Hessian never exists."""
+    z = b * (A @ x)
+    s = jax.nn.sigmoid(z)
+    w = s * (1.0 - s)  # (m,)
+    return A.T @ (w * (A @ v)) / A.shape[0] + mu * v
+
+
 def logistic_regression(mu: float = 1e-3) -> Objective:
     loss = jax.vmap(partial(_logreg_loss_1, mu=mu), in_axes=(None, 0, 0))
     grad = jax.vmap(partial(_logreg_grad_1, mu=mu), in_axes=(None, 0, 0))
     hess = jax.vmap(partial(_logreg_hessian_1, mu=mu), in_axes=(None, 0, 0))
+    # hvp maps per-client anchors AND per-client vectors (see Objective doc)
+    hvp = jax.vmap(partial(_logreg_hvp_1, mu=mu), in_axes=(0, 0, 0, 0))
     return Objective(
         local_loss=lambda x, d: loss(x, d.features, d.labels),
         local_grad=lambda x, d: grad(x, d.features, d.labels),
         local_hessian=lambda x, d: hess(x, d.features, d.labels),
+        local_hvp=lambda x, d, v: hvp(x, v, d.features, d.labels),
     )
 
 
@@ -155,7 +183,14 @@ def quadratic() -> Objective:
     def hess(x, d):
         return d.features
 
-    return Objective(local_loss=loss, local_grad=grad, local_hessian=hess)
+    def hvp(x, d, v):
+        # The quadratic's Hessian IS the stored P_i, so "matrix-free" here
+        # just means applying it without the dense-solve factorization path.
+        return jnp.einsum("nij,nj->ni", d.features, v)
+
+    return Objective(
+        local_loss=loss, local_grad=grad, local_hessian=hess, local_hvp=hvp
+    )
 
 
 def quadratic_optimum(data: ClientDataset) -> jax.Array:

@@ -27,8 +27,10 @@ Two sampling laws:
   * ``"bernoulli"`` — every client participates independently w.p.
     ``fraction`` (the variance-bearing law; rounds can over/under-shoot,
     including the empty round, which degenerates to y=0 / x unchanged);
-  * ``"fixed"``     — exactly ``max(1, round(fraction * n))`` clients,
-    uniformly without replacement (the FedAvg-style law).
+  * ``"fixed"``     — exactly ``ceil(fraction * n)`` clients, uniformly
+    without replacement (the FedAvg-style law). Ceiling, not rounding:
+    "25% of 10 clients" must never under-sample the asked-for fraction
+    (Python's banker's rounding made ``round(2.5) == 2``).
 
 Sampling is deterministic per ``seed`` and *identical across schedules*:
 masks are always drawn for the full global client range from a replicated
@@ -39,6 +41,7 @@ invariance trick the Q-FedNew quantizer keys use.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import jax
@@ -76,8 +79,14 @@ class Participation:
         return jax.random.PRNGKey(self.seed)
 
     def fixed_count(self, n_clients: int) -> int:
-        """Clients per round under the ``"fixed"`` law."""
-        return max(1, int(round(self.fraction * n_clients)))
+        """Clients per round under the ``"fixed"`` law: ``ceil(fraction·n)``,
+        i.e. never fewer than the asked-for fraction. (The old
+        ``int(round(·))`` under-sampled at the half-way cases through
+        banker's rounding: 25% of 10 clients gave 2, not 3.) A hair of
+        relative slack keeps float products that should be integers (e.g.
+        ``0.1 * 30 == 3.0000000000000004``) from ceiling one too high."""
+        target = self.fraction * n_clients
+        return max(1, math.ceil(target - 1e-9 * max(1.0, target)))
 
 
 def round_mask(key: jax.Array, n_clients: int, part: Participation) -> jax.Array:

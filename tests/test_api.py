@@ -197,6 +197,164 @@ def test_dual_sum_invariant_under_participation():
 
 
 # ---------------------------------------------------------------------------
+# fixed-count participation: ceil semantics (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_count_ceil_never_undersamples():
+    """``fixed`` samples ceil(fraction*n): banker's rounding used to turn
+    "25% of 10 clients" into 2 (int(round(2.5))), under-sampling the spec'd
+    fraction. Half-way cases are the regression surface."""
+    cases = {
+        (0.25, 10): 3,  # the bug: round(2.5) == 2
+        (0.5, 10): 5,
+        (0.75, 10): 8,  # round(7.5) == 8 by luck; ceil by definition
+        (0.15, 10): 2,
+        (0.25, 2): 1,
+        (0.1, 30): 3,   # 0.1*30 == 3.0000000000000004: no float over-ceil
+        (0.05, 10): 1,
+        (1.0, 7): 7,
+    }
+    for (f, n), want in cases.items():
+        got = pl.Participation(fraction=f, kind="fixed").fixed_count(n)
+        assert got == want, (f, n, got, want)
+        assert got >= f * n - 1e-6  # never fewer than the asked-for fraction
+
+
+@pytest.mark.parametrize("mesh_devices", [None, 1], ids=["scan", "shard_map"])
+def test_fixed_count_host_replay_matches_scan(mesh_devices):
+    """At the half-way case the in-scan mask (round_mask inside lax.scan)
+    and the host replay (round_masks -> sampled_counts, the exact-ledger
+    basis) must agree on ceil counts under every schedule."""
+    part = api.ParticipationSpec(fraction=0.25, kind="fixed", seed=2)
+    res = api.run(a1a_spec(
+        schedule=api.ScheduleSpec(rounds=4, mesh_devices=mesh_devices),
+        participation=part,
+    ))
+    assert res.sampled_clients == [3] * 4  # ceil(0.25 * 10), not round
+    payload = exact_payload_bits(res.dim, 32)
+    np.testing.assert_allclose(
+        res.metrics["uplink_bits_per_client"],
+        [payload * 3 / 10] * 4, rtol=1e-6,
+    )
+    assert res.uplink_bits_total == [payload * 3] * 4
+
+
+# ---------------------------------------------------------------------------
+# forced-empty round: end-to-end freeze through both schedules (regression)
+# ---------------------------------------------------------------------------
+
+
+def _first_empty_round(part: pl.Participation, n: int, rounds: int):
+    """Index of the first all-zero round in the replayed mask schedule
+    (skipping round 0 so there is a pre-empty state to compare against)."""
+    masks = pl.round_masks(part, rounds, n)
+    for r in range(1, rounds):
+        if masks[r].sum() == 0:
+            return r
+    return None
+
+
+@pytest.mark.parametrize("mesh_devices", [None, 1], ids=["scan", "shard_map"])
+@pytest.mark.parametrize("solver,hp", [
+    ("fednew", FEDNEW_HP),
+    ("q-fednew", {**FEDNEW_HP, "bits": 3}),
+], ids=["fednew", "q-fednew"])
+def test_empty_round_freezes_state_end_to_end(mesh_devices, solver, hp):
+    """An all-zero Bernoulli round must be a frozen no-op all the way
+    through the engine: finite metrics, x unchanged, lam/y_hat/curv
+    untouched, 0 bits charged — under scan AND shard_map."""
+    n = 10
+    part = empty_r = None
+    for seed in range(50):
+        cand = pl.Participation(fraction=0.05, kind="bernoulli", seed=seed)
+        empty_r = _first_empty_round(cand, n, rounds=6)
+        if empty_r is not None:
+            part = cand
+            break
+    assert part is not None, "no empty round in 50 seeds?!"
+
+    spec = a1a_spec()
+    obj, data = api.build_problem(spec)
+    sol = engine.get_solver(solver, **hp)
+    mesh = make_client_mesh(1) if mesh_devices else None
+
+    def run_rounds(r):
+        return engine.run(
+            sol, obj, data, r, key=jax.random.PRNGKey(0), mesh=mesh,
+            participation=part,
+        )
+
+    before, _ = run_rounds(empty_r)          # ends just before the empty round
+    after, metrics = run_rounds(empty_r + 1)  # includes it
+    # host replay confirms the round really was empty
+    assert pl.sampled_counts(part, empty_r + 1, n)[empty_r] == 0
+
+    for field in ("x", "lam", "y_hat", "curv"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(before, field)),
+            np.asarray(getattr(after, field)),
+            err_msg=f"{field} changed across an empty round",
+        )
+    for name, vals in zip(metrics._fields, metrics):
+        assert np.all(np.isfinite(np.asarray(vals))), name
+    assert float(metrics.uplink_bits_per_client[empty_r]) == 0.0
+    assert float(metrics.direction_norm[empty_r]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# RunResult: exact-int JSON ledger + compile/steady wall-clock split
+# ---------------------------------------------------------------------------
+
+
+def test_save_json_keeps_ledger_ints_exact(tmp_path):
+    """numpy integers leaking into the ledger must serialize as JSON ints
+    (the old ``default=float`` silently rounded past 2^53); unknown types
+    must raise instead of degrading."""
+    res = api.run(a1a_spec(schedule=api.ScheduleSpec(rounds=2)))
+    big = 2**60 + 1  # not representable as a float64
+    res.uplink_bits_total = [np.int64(b) for b in res.uplink_bits_total]
+    res.cumulative_uplink_bits_total = [
+        np.int64(res.cumulative_uplink_bits_total[0]), np.int64(big)
+    ]
+    path = tmp_path / "result.json"
+    res.save_json(str(path))
+    payload = json.loads(path.read_text())
+    for got, want in zip(
+        payload["cumulative_uplink_bits_total"],
+        res.cumulative_uplink_bits_total,
+    ):
+        assert isinstance(got, int), type(got)
+        assert got == int(want)
+    assert payload["cumulative_uplink_bits_total"][-1] == big
+    for got in payload["uplink_bits_total"]:
+        assert isinstance(got, int)
+
+    res.spec["not_json"] = object()
+    with pytest.raises(TypeError, match="refuses"):
+        res.save_json(str(tmp_path / "bad.json"))
+
+
+def test_wall_clock_split_compile_vs_steady():
+    """First dispatched block carries trace+compile; later blocks are
+    steady-state. The split fields must cover the total and the compile
+    block must dominate a tiny CPU problem."""
+    res = api.run(a1a_spec(
+        schedule=api.ScheduleSpec(rounds=6, block_size=2)  # 3 equal blocks
+    ))
+    assert res.compile_s > 0.0
+    assert res.steady_wall_clock_s > 0.0
+    assert res.compile_s + res.steady_wall_clock_s <= res.wall_clock_s + 1e-3
+    # 2 steady blocks re-run a compiled function: far cheaper than block 1
+    assert res.steady_wall_clock_s < res.compile_s
+    assert {"compile_s", "steady_wall_clock_s"} <= res.to_dict().keys()
+    # the round counts each window covers ride along (per-round figures
+    # must divide by these, not by the spec's total rounds)
+    assert res.compile_rounds == 2
+    assert res.steady_rounds == 4
+
+
+# ---------------------------------------------------------------------------
 # spec serialization
 # ---------------------------------------------------------------------------
 

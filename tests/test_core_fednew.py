@@ -58,10 +58,10 @@ def test_hessian_period_zero_never_refactorizes(logreg_problem):
     obj, data = logreg_problem
     cfg = fednew.FedNewConfig(rho=0.1, alpha=0.05, hessian_period=0)
     state = fednew.init(obj, data, cfg, KEY)
-    chol0 = state.chol
+    curv0 = state.curv
     for _ in range(3):
         state, _ = fednew.step(state, obj, data, cfg)
-    assert jnp.array_equal(state.chol, chol0)
+    assert jnp.array_equal(state.curv, curv0)
     # and it still converges (paper: r=0 tracks Newton-Zero)
     state2, hist = fednew.run(obj, data, cfg, rounds=80)
     assert hist.grad_norm[-1] < 1e-2
