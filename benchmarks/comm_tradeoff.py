@@ -1,0 +1,210 @@
+"""Codec x bits x participation sweep: the loss-vs-simulated-seconds frontier.
+
+Every run is one declarative ``ExperimentSpec`` on the paper's w8a logreg
+config: the spec's ``compression`` section swaps the ``repro.comm`` codec
+(identity / stoch_quant / topk / bit_schedule) and its ``network`` section
+prices the exact uplink+downlink ledgers under heterogeneous 10/100 Mbps
+client links (log-normal stragglers). The artifact records, per run, the
+optimality-gap trajectory against cumulative *simulated seconds* and
+cumulative *uplink bits per client* — the frontier the paper's
+communication-efficiency claim lives on — plus the headline comparison:
+
+    topk (diff-feedback, f=0.1, float32 values) reaches the 1e-2 relative
+    loss gap with >= 10x fewer uplink bits than full precision.
+
+``COMM_SMOKE=1`` shrinks to a tiny custom problem and a 3-codec subset (the
+CI leg; schema checked by scripts/check_comm_artifact.py). ``BENCH_ROUNDS``
+caps rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+from benchmarks.common import emit, save_json
+from repro import api
+from repro.core import baselines
+
+TARGET_REL_GAP = 1e-2
+
+SMOKE = os.environ.get("COMM_SMOKE", "0") == "1"
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "12" if SMOKE else "60"))
+
+# Paper logreg hparams; topk runs at the smaller rho the diff-feedback law
+# needs for stability at aggressive sparsity (measured: rho=0.1 diverges at
+# f=0.1, rho=0.02 converges in ~1.4x the full-precision rounds).
+HP_FULL = {"rho": 0.1, "alpha": 0.03, "hessian_period": 1}
+HP_TOPK = {"rho": 0.02, "alpha": 0.03, "hessian_period": 1}
+
+NETWORK = api.NetworkSpec(
+    uplink_mbps=10.0, downlink_mbps=100.0, latency_s=0.05,
+    heterogeneity="lognormal", sigma=0.5, seed=0,
+)
+
+# (label, codec spec or None for full precision, solver hparams)
+FULL_CODECS = [
+    ("identity", None, HP_FULL),
+    ("sq2", {"codec": "stoch_quant", "params": {"bits": 2}}, HP_FULL),
+    ("sq3", {"codec": "stoch_quant", "params": {"bits": 3}}, HP_FULL),
+    ("sq4", {"codec": "stoch_quant", "params": {"bits": 4}}, HP_FULL),
+    ("topk10", {"codec": "topk",
+                "params": {"fraction": 0.1, "value_bits": 32}}, HP_TOPK),
+    ("topk25", {"codec": "topk",
+                "params": {"fraction": 0.25, "value_bits": 32}}, HP_TOPK),
+    ("warmup2to4", {"codec": "bit_schedule",
+                    "params": {"schedule": [[0, 2], [20, 4]]}}, HP_FULL),
+]
+SMOKE_CODECS = [
+    ("identity", None, HP_FULL),
+    ("sq3", {"codec": "stoch_quant", "params": {"bits": 3}}, HP_FULL),
+    ("topk25", {"codec": "topk",
+                "params": {"fraction": 0.25, "value_bits": 32}}, HP_TOPK),
+]
+
+PARTICIPATIONS = (1.0,) if SMOKE else (1.0, 0.5)
+
+
+def base_spec() -> api.ExperimentSpec:
+    if SMOKE:
+        # float32 so the smoke path also runs without x64 (tier-1 tests)
+        partition = api.PartitionSpec(
+            dataset="custom", n_clients=8, samples_per_client=16, dim=24,
+            seed=42, dtype="float32",
+        )
+    else:
+        partition = api.PartitionSpec(dataset="w8a", seed=42, dtype="float64")
+    return api.ExperimentSpec(
+        name="comm-tradeoff",
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=partition,
+        schedule=api.ScheduleSpec(rounds=ROUNDS),
+        network=NETWORK,
+    )
+
+
+def rounds_to_rel_gap(losses, f_star: float, rel: float) -> int:
+    """First 1-based round whose loss is within ``rel`` of f*; -1 if never."""
+    target = f_star + rel * abs(f_star)
+    for r, loss in enumerate(losses):
+        if loss <= target:
+            return r + 1
+    return -1
+
+
+def run_one(base, label, codec, hp, fraction, f_star):
+    spec = dataclasses.replace(
+        base,
+        solver=api.SolverSpec("fednew", hp),
+        compression=(None if codec is None
+                     else api.CompressionSpec(**codec)),
+        participation=api.ParticipationSpec(
+            fraction=fraction, kind="fixed", seed=1
+        ),
+    )
+    res = api.run(spec)
+    r_target = rounds_to_rel_gap(res.metrics["loss"], f_star, TARGET_REL_GAP)
+    bits_pc = res.cumulative_uplink_bits_per_client
+    sim_cum = []
+    acc = 0.0
+    for t in res.simulated_round_s:
+        acc += t
+        sim_cum.append(acc)
+    return {
+        "label": label,
+        "codec": codec if codec is not None else {"codec": "identity",
+                                                  "params": {}},
+        "participation": fraction,
+        "solver_hparams": hp,
+        "final_rel_gap": (res.metrics["loss"][-1] - f_star) / abs(f_star),
+        "rounds_to_target": r_target,
+        "uplink_bits_per_client_to_target": (
+            bits_pc[r_target - 1] if r_target > 0 else None
+        ),
+        "cumulative_uplink_bits_per_client": bits_pc[-1],
+        "cumulative_downlink_bits_total": res.cumulative_downlink_bits_total[-1],
+        "simulated_time_s": res.simulated_time_s,
+        "simulated_time_to_target_s": (
+            sim_cum[r_target - 1] if r_target > 0 else None
+        ),
+        "frontier": {
+            "rel_gap": [(l - f_star) / abs(f_star)
+                        for l in res.metrics["loss"]],
+            "sim_time_s": sim_cum,
+            "uplink_bits_per_client": bits_pc,
+        },
+    }
+
+
+def main():
+    base = base_spec()
+    obj, data = api.build_problem(base)
+    _, f_star = baselines.reference_optimum(obj, data)
+    f_star = float(f_star)
+
+    codecs = SMOKE_CODECS if SMOKE else FULL_CODECS
+    runs = []
+    for fraction in PARTICIPATIONS:
+        for label, codec, hp in codecs:
+            row = run_one(base, label, codec, hp, fraction, f_star)
+            runs.append(row)
+            emit(
+                f"comm_tradeoff/{label}/p{fraction}", 0.0,
+                f"rel_gap={row['final_rel_gap']:.2e};"
+                f"rounds_to_tgt={row['rounds_to_target']};"
+                f"sim_s={row['simulated_time_s']:.2f}",
+            )
+
+    # Headline: topk-with-error-feedback vs full precision, uplink bits to
+    # the 1e-2 relative gap (full participation rows).
+    def bits_to_target(label) -> Optional[float]:
+        for row in runs:
+            if row["label"] == label and row["participation"] == 1.0:
+                return row["uplink_bits_per_client_to_target"]
+        return None
+
+    topk_label = "topk25" if SMOKE else "topk10"
+    full_bits, topk_bits = bits_to_target("identity"), bits_to_target(topk_label)
+    ratio = (full_bits / topk_bits) if (full_bits and topk_bits) else None
+    headline = {
+        "target_rel_gap": TARGET_REL_GAP,
+        "full_bits_per_client": full_bits,
+        "topk_bits_per_client": topk_bits,
+        "topk_label": topk_label,
+        "ratio": ratio,
+        "pass": bool(ratio is not None and ratio >= 10.0) if not SMOKE else None,
+    }
+    emit(
+        "comm_tradeoff/topk_vs_full", 0.0,
+        f"ratio={ratio if ratio else 'n/a'};pass={headline['pass']}",
+    )
+
+    results = {
+        "config": {
+            "smoke": SMOKE,
+            "rounds": ROUNDS,
+            "f_star": f_star,
+            "dataset": base.partition.dataset,
+            "dim": data.dim,
+            "n_clients": data.n_clients,
+            "participations": list(PARTICIPATIONS),
+            "network": dataclasses.asdict(NETWORK),
+        },
+        "runs": runs,
+        "topk_vs_full": headline,
+    }
+    save_json("comm_tradeoff.json", results)
+    if not SMOKE and headline["pass"] is False:
+        raise AssertionError(
+            f"topk vs full-precision uplink ratio {ratio} < 10 at "
+            f"{TARGET_REL_GAP} relative gap"
+        )
+    return results
+
+
+if __name__ == "__main__":
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    main()

@@ -1,43 +1,22 @@
 """Shared harness utilities for the paper-reproduction benchmarks.
 
-All training-curve suites are declarative now: they build
+All training-curve suites are declarative: they build
 ``repro.api.ExperimentSpec`` objects and run them through ``repro.api.run``
 (scan-compiled engine underneath), so a new scenario is a new spec, not a
-new loop. ``run_solver`` survives as a deprecated thin wrapper over
-``repro.api.run_components`` for out-of-tree callers of the old imperative
-surface."""
+new loop. (The deprecated ``run_solver`` wrapper over the old imperative
+surface was removed once the last caller migrated onto specs; use
+``repro.api.run_components`` for prebuilt objective/data.)"""
 
 from __future__ import annotations
 
 import json
 import os
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro import api
-
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
-
-
-def run_solver(name: str, obj, data, rounds: int, *, key=None, mesh=None,
-               block_size=None, **hparams):
-    """Deprecated: call ``repro.api.run(ExperimentSpec(...))`` (declarative)
-    or ``repro.api.run_components`` (prebuilt obj/data) instead. Kept as a
-    signature-compatible wrapper; behavior is unchanged."""
-    warnings.warn(
-        "benchmarks.common.run_solver is deprecated; use repro.api.run "
-        "with an ExperimentSpec (or repro.api.run_components for prebuilt "
-        "objective/data)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return api.run_components(
-        name, obj, data, rounds, key=key, mesh=mesh, block_size=block_size,
-        **hparams,
-    )
 
 
 def ensure_out() -> str:

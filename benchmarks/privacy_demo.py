@@ -1,5 +1,12 @@
 """Privacy benchmark (paper Sec. 4): reconstruction error of an
-honest-but-curious PS across all four datasets + the Thm 2 ledger."""
+honest-but-curious PS across all four datasets + the Thm 2 ledger.
+
+The FedNew transcript the PS observes is reproduced through the SAME engine
+path every other suite uses (``repro.api.run_components``): the engine is
+deterministic per key, so running r = 1..K rounds gives the state after
+every round, from which the wire values (y_i^k via the dual recursion, y^k)
+and the ground-truth gradients are recovered — no hand-rolled host loop.
+"""
 
 from __future__ import annotations
 
@@ -7,28 +14,42 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json
-from repro.core import fednew
-from repro.core.objectives import logistic_regression
+from repro import api
 from repro.core.privacy import reconstruction_attack, unknown_equation_count
 from repro.data.synthetic import PAPER_DATASETS, make_dataset
 
 ROUNDS = 15
+HP = {"rho": 0.1, "alpha": 0.05, "hessian_period": 1}
+
+
+def fednew_transcript(obj, data, rounds: int, key, **hp):
+    """Per-round (y_i^k of client 0, y^k, g^k at the round's iterate) from
+    engine state snapshots: run the registry solver for r = 1..rounds via
+    ``api.run_components`` (bit-identical prefixes — same key, same math).
+    y_i^k is recovered from the eq. 12 dual recursion:
+    lam^k = lam^{k-1} + rho (y_i^k - y^k)."""
+    states = [
+        api.run_components("fednew", obj, data, r, key=key, **hp)[0]
+        for r in range(1, rounds + 1)
+    ]
+    ys_i, ys, gs = [], [], []
+    for k, st in enumerate(states):
+        x_prev = states[k - 1].x if k else jnp.zeros_like(st.x)
+        lam_prev = states[k - 1].lam[0] if k else jnp.zeros_like(st.lam[0])
+        gs.append(obj.local_grad(x_prev, data)[0])
+        ys_i.append((st.lam[0] - lam_prev) / hp["rho"] + st.y)
+        ys.append(st.y)
+    return jnp.stack(ys_i), jnp.stack(ys), jnp.stack(gs)
 
 
 def attack_dataset(name: str):
     data = make_dataset(PAPER_DATASETS[name], jax.random.PRNGKey(3))
-    obj = logistic_regression(1e-3)
-    cfg = fednew.FedNewConfig(rho=0.1, alpha=0.05, hessian_period=1)
-    state = fednew.init(obj, data, cfg, jax.random.PRNGKey(4))
-    ys_i, ys, gs = [], [], []
-    for _ in range(ROUNDS):
-        gs.append(obj.local_grad(state.x, data)[0])
-        prev_lam = state.lam
-        state, _ = fednew.step(state, obj, data, cfg)
-        ys_i.append((state.lam[0] - prev_lam[0]) / cfg.rho + state.y)
-        ys.append(state.y)
+    obj = api.build_objective(api.ObjectiveSpec(kind="logreg", mu=1e-3))
+    ys_i, ys, gs = fednew_transcript(
+        obj, data, ROUNDS, jax.random.PRNGKey(4), **HP
+    )
     _, rel_err = reconstruction_attack(
-        jnp.stack(ys_i), jnp.stack(ys), jnp.stack(gs), cfg.rho, cfg.damping
+        ys_i, ys, gs, HP["rho"], HP["rho"] + HP["alpha"]
     )
     ledger = unknown_equation_count(data.dim, ROUNDS, 1)
     return float(rel_err), ledger

@@ -9,24 +9,28 @@ Two adversaries are simulated against the same FedNew run:
      gradients still miss by O(1) relative error.
 Contrast: FedGD broadcasts g_i verbatim (reconstruction error exactly 0).
 
+The observed transcript comes from the SAME engine path every benchmark and
+example uses (``repro.api.run_components``): the engine is deterministic per
+key, so prefix runs of r = 1..K rounds yield the state after every round,
+and the wire values follow from the eq. 12 dual recursion.
+
     PYTHONPATH=src python examples/privacy_attack.py
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import fednew
-from repro.core.objectives import logistic_regression
+from repro import api
 from repro.core.privacy import reconstruction_attack, unknown_equation_count
 from repro.data.synthetic import PAPER_DATASETS, make_dataset
 
 ROUNDS = 15
+HP = {"rho": 0.1, "alpha": 0.05, "hessian_period": 1}
 
 
 def main() -> None:
     data = make_dataset(PAPER_DATASETS["a1a"], jax.random.PRNGKey(1))
-    obj = logistic_regression(mu=1e-3)
-    cfg = fednew.FedNewConfig(rho=0.1, alpha=0.05, hessian_period=1)
+    obj = api.build_objective(api.ObjectiveSpec(kind="logreg", mu=1e-3))
     d = data.dim
 
     ledger = unknown_equation_count(d, ROUNDS, hessian_period=1)
@@ -35,18 +39,24 @@ def main() -> None:
     print(f"  equations: {ledger.equations}   unknowns: {ledger.unknowns}")
     print(f"  underdetermined: {ledger.underdetermined}\n")
 
-    # transcript the PS actually sees: y_i (client 0) and the global y
-    state = fednew.init(obj, data, cfg, jax.random.PRNGKey(2))
+    # transcript the PS actually sees: y_i (client 0) and the global y,
+    # recovered from engine state snapshots (deterministic prefix runs)
+    states = [
+        api.run_components("fednew", obj, data, r,
+                           key=jax.random.PRNGKey(2), **HP)[0]
+        for r in range(1, ROUNDS + 1)
+    ]
     ys_i, ys, gs = [], [], []
-    for _ in range(ROUNDS):
-        gs.append(obj.local_grad(state.x, data)[0])
-        prev_lam = state.lam
-        state, _ = fednew.step(state, obj, data, cfg)
-        ys_i.append((state.lam[0] - prev_lam[0]) / cfg.rho + state.y)
-        ys.append(state.y)
+    for k, st in enumerate(states):
+        x_prev = states[k - 1].x if k else jnp.zeros_like(st.x)
+        lam_prev = states[k - 1].lam[0] if k else jnp.zeros_like(st.lam[0])
+        gs.append(obj.local_grad(x_prev, data)[0])
+        ys_i.append((st.lam[0] - lam_prev) / HP["rho"] + st.y)
+        ys.append(st.y)
 
     _, rel_err = reconstruction_attack(
-        jnp.stack(ys_i), jnp.stack(ys), jnp.stack(gs), cfg.rho, cfg.damping
+        jnp.stack(ys_i), jnp.stack(ys), jnp.stack(gs),
+        HP["rho"], HP["rho"] + HP["alpha"],
     )
     print("Oracle-assisted reconstruction attack on the FedNew transcript:")
     print(f"  relative L2 error of recovered gradients: {float(rel_err):.3f}")

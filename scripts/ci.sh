@@ -35,6 +35,13 @@ python -m repro.api examples/specs/quickstart.json \
 # itself) so 64-bit word accounting and the JSON int ledger are exercised
 # end to end.
 JAX_ENABLE_X64=1 python -m pytest -x -q \
-    tests/test_quantization.py tests/test_api.py
+    tests/test_quantization.py tests/test_api.py tests/test_comm.py
 python -m repro.api examples/specs/float64_smoke.json \
     --out benchmarks/out/float64_runresult.json
+
+# Benchmarks smoke leg: run the comm-tradeoff suite at tiny dims (3 codecs,
+# a few rounds) through the real benchmark harness, then assert the
+# artifact's JSON schema — the frontier emitter and the exact downlink /
+# simulated-time plumbing cannot silently rot.
+COMM_SMOKE=1 BENCH_ROUNDS=4 python -m benchmarks.run --only comm_tradeoff
+python scripts/check_comm_artifact.py benchmarks/out/comm_tradeoff.json

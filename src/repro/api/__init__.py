@@ -28,12 +28,15 @@ from repro.api.build import (
     build_objective,
     build_participation,
     build_problem,
+    build_run_codec,
     build_solver,
 )
 from repro.api.runner import RunResult, run, run_components
 from repro.api.specs import (
     SCHEMA_VERSION,
+    CompressionSpec,
     ExperimentSpec,
+    NetworkSpec,
     ObjectiveSpec,
     ParticipationSpec,
     PartitionSpec,
@@ -51,6 +54,8 @@ __all__ = [
     "ScheduleSpec",
     "ParticipationSpec",
     "TelemetrySpec",
+    "CompressionSpec",
+    "NetworkSpec",
     "RunResult",
     "run",
     "run_components",
@@ -58,6 +63,7 @@ __all__ = [
     "build_dataset",
     "build_problem",
     "build_solver",
+    "build_run_codec",
     "build_mesh",
     "build_participation",
 ]

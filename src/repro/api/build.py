@@ -80,8 +80,35 @@ def build_problem(
     )
 
 
-def build_solver(spec: SolverSpec) -> engine.FederatedSolver:
-    return engine.get_solver(spec.name, **spec.hparams)
+def _merged_solver_hparams(spec: SolverSpec, compression) -> dict:
+    """Solver hparams with a ``CompressionSpec`` folded in as the fednew
+    ``codec`` hparam (conflicts already rejected at spec build). The ONE
+    merge rule — both the solver that runs and the ledger's accounting
+    codec derive from it, so they cannot drift."""
+    hparams = dict(spec.hparams)
+    if compression is not None:
+        hparams["codec"] = compression.to_codec_spec()
+    return hparams
+
+
+def build_solver(
+    spec: SolverSpec, compression=None
+) -> engine.FederatedSolver:
+    return engine.get_solver(
+        spec.name, **_merged_solver_hparams(spec, compression)
+    )
+
+
+def build_run_codec(spec: ExperimentSpec):
+    """The ``repro.comm`` codec a fednew-family run transmits through — the
+    single accounting authority for the exact uplink ledger (``None`` for
+    solvers with their own fixed payloads, e.g. the Newton baselines)."""
+    if spec.solver.name not in ("fednew", "q-fednew"):
+        return None
+    from repro.core import fednew
+
+    hparams = _merged_solver_hparams(spec.solver, spec.compression)
+    return fednew.FedNewConfig(**hparams).build_codec()
 
 
 def check_solver_objective(spec: ExperimentSpec, obj: objectives.Objective):

@@ -23,11 +23,7 @@ import numpy as np
 from repro.api import build
 from repro.api.specs import ExperimentSpec
 from repro.core import engine, participation as participation_lib
-from repro.core.quantization import (
-    exact_payload_bits,
-    payload_bits,
-    word_bits,
-)
+from repro.core.quantization import exact_payload_bits, word_bits
 
 
 class LedgerJSONEncoder(json.JSONEncoder):
@@ -64,6 +60,18 @@ class RunResult:
     cumulative_uplink_bits_per_client  the paper's x-axis: cumulative mean
                                      uplink bits per client (floats; exact
                                      division of the int ledger).
+    downlink_bits_total              exact per-round downlink bits (the PS
+                                     broadcasts x^k to each sampled client
+                                     at the transmitted word size), summed
+                                     over the sampled clients — Python ints,
+                                     same contract as the uplink ledger.
+    cumulative_downlink_bits_total   running sum of the above.
+    simulated_round_s / simulated_time_s
+                                     ``repro.comm.netsim`` synchronous-round
+                                     wall-clock (max over sampled clients of
+                                     broadcast + upload + 2·latency) driven
+                                     by the exact ledgers; present only when
+                                     the spec carries a ``network`` section.
     wall_clock_s                     total run wall clock (= compile_s +
                                      steady_wall_clock_s).
     compile_s / compile_rounds       wall clock and round count of the
@@ -97,6 +105,12 @@ class RunResult:
     compile_rounds: int = 0
     steady_rounds: int = 0
     f_star: Optional[float] = None
+    downlink_bits_total: List[int] = dataclasses.field(default_factory=list)
+    cumulative_downlink_bits_total: List[int] = dataclasses.field(
+        default_factory=list
+    )
+    simulated_round_s: Optional[List[float]] = None
+    simulated_time_s: Optional[float] = None
 
     @property
     def final_loss(self) -> float:
@@ -114,16 +128,18 @@ class RunResult:
 
 
 def _per_round_payload_bits(
-    solver_name: str, hparams: Dict[str, Any], d: int, word: int, rounds: int
+    spec: ExperimentSpec, d: int, word: int, rounds: int
 ) -> List[int]:
     """Exact bits ONE sampled client uploads in each round, as Python ints
     (mirrors each step's metric expression; pinned against the traced
-    metric in tests/test_api.py)."""
-    if solver_name == "q-fednew" or (
-        solver_name == "fednew" and hparams.get("bits")
-    ):
-        return [payload_bits(int(hparams["bits"]), d)] * rounds
-    if solver_name in ("fednew", "fedgd"):
+    metric in tests/test_api.py). fednew-family solvers delegate to their
+    ``repro.comm`` codec — the same object whose ``payload_bits_metric``
+    the compiled step emits — so the ledger and the metric cannot drift."""
+    solver_name = spec.solver.name
+    codec = build.build_run_codec(spec)
+    if codec is not None:
+        return [codec.payload_bits(d, word, r) for r in range(rounds)]
+    if solver_name == "fedgd":
         return [exact_payload_bits(d, word)] * rounds
     if solver_name == "newton-zero":
         first = exact_payload_bits(d * d + d, word)
@@ -132,6 +148,13 @@ def _per_round_payload_bits(
     if solver_name == "newton":
         return [exact_payload_bits(d * d + d, word)] * rounds
     raise KeyError(f"no uplink accounting for solver {solver_name!r}")
+
+
+def _per_round_downlink_bits(d: int, word: int, rounds: int) -> List[int]:
+    """Exact bits the PS sends ONE sampled client per round: the broadcast
+    of the current iterate x^k at the transmitted word size (every solver
+    here broadcasts exactly the d-vector — Hessians never go downlink)."""
+    return [exact_payload_bits(d, word)] * rounds
 
 
 def _transmitted_word_bits(data) -> int:
@@ -150,7 +173,7 @@ def run(spec: ExperimentSpec) -> RunResult:
     run / participation)."""
     obj, data = build.build_problem(spec)
     build.check_solver_objective(spec, obj)
-    solver = build.build_solver(spec.solver)
+    solver = build.build_solver(spec.solver, spec.compression)
     mesh = build.build_mesh(spec.schedule, data.n_clients)
     part = build.build_participation(spec)
     sched = spec.schedule
@@ -192,20 +215,40 @@ def run(spec: ExperimentSpec) -> RunResult:
         f_star = float(fs)
         metric_lists["gap"] = [l - f_star for l in metric_lists["loss"]]
 
-    # Exact integer uplink ledger: per-message payloads (Python ints) times
-    # the per-round sampled-client counts replayed from the mask schedule.
+    # Exact integer uplink + downlink ledgers: per-message payloads (Python
+    # ints) times the per-round sampled-client counts replayed from the mask
+    # schedule.
     n = data.n_clients
+    word = _transmitted_word_bits(data)
     counts = participation_lib.sampled_counts(part, sched.rounds, n)
-    payloads = _per_round_payload_bits(
-        spec.solver.name, dict(spec.solver.hparams), data.dim,
-        _transmitted_word_bits(data), sched.rounds,
-    )
+    payloads = _per_round_payload_bits(spec, data.dim, word, sched.rounds)
+    down_payloads = _per_round_downlink_bits(data.dim, word, sched.rounds)
     totals = [p * c for p, c in zip(payloads, counts)]
-    cumulative: List[int] = []
-    acc = 0
-    for t in totals:
-        acc += t
-        cumulative.append(acc)
+    down_totals = [p * c for p, c in zip(down_payloads, counts)]
+
+    def running_sum(values: List[int]) -> List[int]:
+        out, acc = [], 0
+        for v in values:
+            acc += v
+            out.append(acc)
+        return out
+
+    cumulative = running_sum(totals)
+
+    # Simulated synchronous-round wall-clock under the spec's link model,
+    # driven by the exact per-message ledgers and the replayed masks.
+    sim_round_s = sim_total_s = None
+    if spec.network is not None:
+        from repro.comm import netsim
+
+        links = spec.network.build_links(n)
+        masks = (
+            participation_lib.round_masks(part, sched.rounds, n)
+            if part is not None else None
+        )
+        sim_round_s, sim_total_s = netsim.simulate_rounds(
+            links, payloads, down_payloads, masks
+        )
 
     result = RunResult(
         spec=spec.to_dict(),
@@ -224,6 +267,10 @@ def run(spec: ExperimentSpec) -> RunResult:
         compile_rounds=compile_rounds,
         steady_rounds=steady_rounds,
         f_star=f_star,
+        downlink_bits_total=down_totals,
+        cumulative_downlink_bits_total=running_sum(down_totals),
+        simulated_round_s=sim_round_s,
+        simulated_time_s=sim_total_s,
     )
     if spec.telemetry.save_path:
         result.save_json(spec.telemetry.save_path)

@@ -35,6 +35,7 @@ import dataclasses
 import json
 from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
+from repro import comm
 from repro.core import engine
 from repro.core import participation as participation_lib
 from repro.data import synthetic
@@ -224,6 +225,85 @@ class ParticipationSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Which ``repro.comm`` codec compresses the uplink (fednew-family
+    solvers only — it is injected as the solver's ``codec`` hparam).
+
+    codec    a registered codec name (``identity`` / ``stoch_quant`` /
+             ``topk`` / ``bit_schedule``).
+    params   the codec's constructor params (e.g. ``{"bits": 3}`` for
+             stoch_quant, ``{"fraction": 0.1, "value_bits": 32}`` for topk,
+             ``{"schedule": [[0, 2], [50, 4]]}`` for bit_schedule). Validated
+             here by building the codec, so a bad spec fails at construction
+             with the valid params in the message.
+    """
+
+    codec: str = "identity"
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "params", dict(self.params))
+        comm.build_codec(self.to_codec_spec())  # raises ValueError on bad spec
+
+    def to_codec_spec(self) -> Dict[str, Any]:
+        return {"name": self.codec, **self.params}
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """Per-client link model for the network-cost simulator
+    (``repro.comm.netsim``): turns the exact uplink + downlink bit ledgers
+    into simulated synchronous-round wall-clock (max over sampled clients).
+
+    uplink_mbps / downlink_mbps   nominal client link rates (megabits/s).
+    latency_s                     nominal one-way latency; a round pays two.
+    heterogeneity                 ``"none"`` (identical links) or
+                                  ``"lognormal"`` (per-client unit-mean
+                                  log-normal rate/latency multipliers —
+                                  the straggler law).
+    sigma                         log-normal sigma (heterogeneity strength).
+    seed                          link-draw PRNG seed (deterministic fleet).
+    """
+
+    uplink_mbps: float = 10.0
+    downlink_mbps: float = 100.0
+    latency_s: float = 0.05
+    heterogeneity: str = "none"
+    sigma: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.uplink_mbps <= 0 or self.downlink_mbps <= 0:
+            raise ValueError(
+                f"link rates must be positive, got uplink={self.uplink_mbps} "
+                f"downlink={self.downlink_mbps}"
+            )
+        if self.latency_s < 0:
+            raise ValueError(f"latency_s must be >= 0, got {self.latency_s}")
+        _check_choice(
+            self.heterogeneity, "network heterogeneity", comm.netsim.HETEROGENEITY
+        )
+        if self.sigma < 0:
+            raise ValueError(f"sigma must be >= 0, got {self.sigma}")
+        if self.sigma > 0 and self.heterogeneity == "none":
+            raise ValueError(
+                "sigma > 0 has no effect under heterogeneity='none'; set "
+                "heterogeneity='lognormal' (or drop sigma)"
+            )
+
+    def build_links(self, n_clients: int) -> comm.ClientLinks:
+        return comm.build_links(
+            n_clients,
+            uplink_mbps=self.uplink_mbps,
+            downlink_mbps=self.downlink_mbps,
+            latency_s=self.latency_s,
+            heterogeneity=self.heterogeneity,
+            sigma=self.sigma,
+            seed=self.seed,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class TelemetrySpec:
     """What to record beyond the per-round engine metrics.
 
@@ -254,7 +334,12 @@ _SECTIONS = {
     "schedule": ScheduleSpec,
     "participation": ParticipationSpec,
     "telemetry": TelemetrySpec,
+    "compression": CompressionSpec,
+    "network": NetworkSpec,
 }
+
+# Sections that may be absent entirely (serialized as JSON null).
+_OPTIONAL_SECTIONS = ("compression", "network")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -272,6 +357,8 @@ class ExperimentSpec:
     schedule: ScheduleSpec = ScheduleSpec()
     participation: ParticipationSpec = ParticipationSpec()
     telemetry: TelemetrySpec = TelemetrySpec()
+    compression: Optional[CompressionSpec] = None
+    network: Optional[NetworkSpec] = None
     seed: int = 0
     name: str = ""
 
@@ -280,6 +367,19 @@ class ExperimentSpec:
             raise ValueError(
                 "quadratic objectives support only partition scheme='iid'"
             )
+        if self.compression is not None:
+            if self.solver.name != "fednew":
+                raise ValueError(
+                    "compression= applies to solver 'fednew' only (q-fednew "
+                    f"is fednew + the stoch_quant codec), got solver "
+                    f"{self.solver.name!r}"
+                )
+            clash = [k for k in ("bits", "codec") if k in self.solver.hparams]
+            if clash:
+                raise ValueError(
+                    f"compression= conflicts with solver hparams {clash}; "
+                    "specify the codec in one place"
+                )
 
     # -- serialization ------------------------------------------------------
 
@@ -299,6 +399,9 @@ class ExperimentSpec:
         kw: Dict[str, Any] = {}
         for key, value in d.items():
             if key in _SECTIONS:
+                if key in _OPTIONAL_SECTIONS and value is None:
+                    kw[key] = None
+                    continue
                 if not isinstance(value, Mapping):
                     raise ValueError(f"spec section {key!r} must be a mapping")
                 section_cls = _SECTIONS[key]

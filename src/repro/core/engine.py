@@ -163,6 +163,14 @@ def get_solver(name: str, **hparams) -> FederatedSolver:
     driver composes with this: inside the ``shard_map`` region each device's
     kernel call sees its own ``(n_clients/n_devices, ...)`` tile.
 
+    What FedNew transmits is a ``repro.comm`` codec: ``bits=b`` is sugar for
+    the ``stoch_quant`` codec (Q-FedNew, bit for bit), and
+    ``codec={"name": "topk", "fraction": 0.1}`` (or any registered codec
+    spec) swaps the compressor. Per-client codec state (previous quantized
+    vector, error-feedback residual) is a ``client_fields`` entry
+    (``FedNewState.comm``), so it shards and scans like every other
+    per-client row.
+
     ``hessian_repr="matfree"`` (+ ``cg_iters``/``cg_tol``) switches the
     eq. 9 solve to CG on the objective's closed-form HVPs: no ``(n, d, d)``
     Hessian is ever built, per-client state is O(d), and the scan/shard_map

@@ -11,7 +11,10 @@ State layout mirrors Algorithm 1:
            hessian_repr="matfree" (n, d) per-client Hessian *anchor points* —
                                   the iterate each client's curvature is
                                   evaluated at; no d x d array ever exists
-  y_hat  (n, d)    per-client previously-quantized vectors (Q-FedNew only)
+  comm   (n, w)    per-client compression-codec state (``repro.comm``): the
+                   previously-quantized vector for stoch_quant (Q-FedNew's
+                   ŷ, historically the ``y_hat`` field), the error-feedback
+                   residual for topk, width 0 for the identity codec
 
 The Hessian refresh rate r from the experiments maps to ``hessian_period``:
 r=1 -> 1, r=0.1 -> 10, r=0 -> 0 (never refresh; factor from x^0 is kept —
@@ -32,12 +35,21 @@ the computation-efficient "zeroth Hessian" variant, one factorization ever).
             the inner iteration; run to convergence (tol ~ 1e-7, generous
             iters) the trajectory matches "dense" to solver tolerance.
 
+What crosses the uplink is owned by a ``repro.comm`` codec: ``codec=None``
+with ``bits=None`` is the identity codec (plain FedNew), ``bits=b`` is sugar
+for the ``stoch_quant`` codec (Q-FedNew — the historical path, bit for bit),
+and ``codec={"name": "topk", "fraction": 0.05}`` (or any registered codec
+spec) swaps the compressor without touching the ADMM math. Each round the
+step encodes the per-client directions, aggregates the *decoded* (PS-side)
+reconstructions in eq. 13, and carries the codec's per-client state in
+``FedNewState.comm``.
+
 Communication accounting follows the paper: the metric of record is uplink
 bits per client per round — w·d for FedNew (w = word bits of the transmitted
-dtype, 32 for float32), ``bits``·d + 32 for Q-FedNew. FedNew never transmits
-Hessians, so refresh rounds cost no extra bits. Counts are exact Python
-ints lowered via ``quantization.payload_bits_array`` (no int32 wraparound
-at LM scale).
+dtype, 32 for float32), ``bits``·d + 32 for Q-FedNew, the codec's exact
+``payload_bits`` in general. FedNew never transmits Hessians, so refresh
+rounds cost no extra bits. Counts are exact Python ints lowered via
+``quantization.payload_bits_array`` (no int32 wraparound at LM scale).
 
 Both hot loops — the eq. 9 client solve and the eqs. 25-30 quantizer — are
 reached through ``repro.kernels.dispatch``: ``FedNewConfig.backend`` selects
@@ -50,20 +62,16 @@ flag remains as an alias for ``solve_backend="pallas"``.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Any, Mapping, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
+from repro import comm
 from repro.core import admm, hvp
 from repro.core.objectives import ClientDataset, Objective
-from repro.core.quantization import (
-    exact_payload_bits,
-    payload_bits,
-    payload_bits_array,
-    word_bits,
-)
+from repro.core.quantization import word_bits
 from repro.kernels import dispatch
 
 
@@ -75,7 +83,7 @@ class FedNewConfig:
     rho: float = 1.0
     alpha: float = 1.0
     hessian_period: int = 1  # 0 => never refresh (r = 0)
-    bits: Optional[int] = None  # None => FedNew; int => Q-FedNew
+    bits: Optional[int] = None  # sugar for codec={"name":"stoch_quant","bits":b}
     use_kernel: bool = False  # legacy alias for solve_backend="pallas"
     backend: str = "auto"  # "auto" | "pallas" | "reference" (both hot loops)
     solve_backend: Optional[str] = None  # per-loop override, eq. 9
@@ -83,11 +91,22 @@ class FedNewConfig:
     hessian_repr: str = "dense"  # "dense" | "matfree" (see module docstring)
     cg_iters: int = 32  # matfree: CG iterations for the eq. 9 solve
     cg_tol: float = 0.0  # matfree: per-client residual-norm early exit (0 = off)
+    codec: Union[None, str, Mapping[str, Any]] = None  # repro.comm codec spec
 
     def __post_init__(self):
         for b in (self.backend, self.solve_backend, self.quant_backend):
             if b is not None:
                 dispatch.validate_backend(b)
+        if self.codec is not None:
+            if self.bits is not None:
+                raise ValueError(
+                    "bits= is sugar for the stoch_quant codec; set either "
+                    "bits or codec, not both"
+                )
+            object.__setattr__(self, "codec", comm.normalize_spec(self.codec))
+        # Build (and discard) the codec so bad specs fail here, at config
+        # construction — the same place every other hparam is validated.
+        self.build_codec()
         if self.hessian_repr not in HESSIAN_REPRS:
             raise ValueError(
                 f"unknown hessian_repr {self.hessian_repr!r}; "
@@ -128,6 +147,20 @@ class FedNewConfig:
         return self.hessian_repr == "matfree"
 
     @property
+    def codec_spec(self) -> Mapping[str, Any]:
+        """Canonical ``repro.comm`` codec spec this config resolves to."""
+        if self.codec is not None:
+            return dict(self.codec)
+        if self.bits is not None:
+            return {"name": "stoch_quant", "bits": self.bits}
+        return {"name": "identity"}
+
+    def build_codec(self) -> comm.Codec:
+        return comm.build_codec(
+            self.codec_spec, backend=self.resolved_quant_backend
+        )
+
+    @property
     def solve_uses_kernel(self) -> bool:
         """Static (trace-time) routing decision for the eq. 9 solve; also
         decides whether state.curv caches Cholesky factors (reference) or
@@ -145,7 +178,7 @@ class FedNewState(NamedTuple):
     y: jax.Array
     lam: jax.Array
     curv: jax.Array  # per-client curvature cache; layout per FedNewConfig
-    y_hat: jax.Array
+    comm: jax.Array  # per-client codec state (ŷ / EF residual / width 0)
     key: jax.Array
     step: jax.Array
 
@@ -198,7 +231,7 @@ def init(
         y=jnp.zeros((d,), dtype),
         lam=jnp.zeros((n, d), dtype),
         curv=_fresh_curv(obj, x, data, cfg, n),
-        y_hat=jnp.zeros((n, d), dtype),
+        comm=cfg.build_codec().init_state(n, d, dtype),
         key=key,
         step=jnp.zeros((), jnp.int32),
     )
@@ -226,20 +259,22 @@ def _local_solve(curv, rhs, cfg: FedNewConfig, obj=None, data=None):
 
 def _mask_rows(mask, new, old):
     """Per-client select: sampled clients take the new row, the rest keep
-    their stale state (lam, y_hat, cached factors)."""
+    their stale state (lam, codec state, cached factors)."""
     m = mask.reshape(mask.shape + (1,) * (new.ndim - 1))
     return jnp.where(m > 0, new, old)
 
 
-def _masked_bits(payload: int, mask, axis_name):
-    """Uplink metric under partial participation (see
-    ``participation.masked_bits_metric``); exact integer totals come from
-    ``participation.round_masks`` on the host."""
-    from repro.core import participation
-
-    return participation.masked_bits_metric(
-        payload_bits_array(payload), mask, axis_name
-    )
+def _client_keys(sub, n_local: int, axis_name, n_global_clients):
+    """Per-client PRNG keys for the codec, identical across schedules: split
+    for ALL clients and slice this shard's rows, so the client-axis layout
+    never changes the randomness."""
+    if axis_name is None:
+        return jax.random.split(sub, n_local)
+    if n_global_clients is None:
+        raise ValueError("sharded codec encoding needs static n_global_clients")
+    keys = jax.random.split(sub, n_global_clients)
+    start = jax.lax.axis_index(axis_name) * n_local
+    return jax.lax.dynamic_slice_in_dim(keys, start, n_local)
 
 
 def step(
@@ -255,7 +290,7 @@ def step(
     """One outer round of Algorithm 1 (optionally quantized).
 
     With ``axis_name`` the round runs inside a ``shard_map`` manual region:
-    ``data`` and the per-client state rows (lam/curv/y_hat) hold only this
+    ``data`` and the per-client state rows (lam/curv/comm) hold only this
     shard's clients, eq. 13 and the metric aggregates become collectives over
     the client mesh axis, and ``n_global_clients`` (static, required on the
     Q-FedNew path) lets every shard derive the same per-client PRNG keys as
@@ -263,11 +298,18 @@ def step(
 
     ``mask`` (a (n_local,) {0,1} participation mask from
     ``repro.core.participation``) restricts the round to the sampled clients:
-    eq. 13 aggregates only their y_i, only they update lam/y_hat/cached
+    eq. 13 aggregates only their y_i, only they update lam/codec-state/cached
     factors, and only they are charged uplink bits. ``mask=None`` is full
     participation — the original code path, bit for bit. Loss/grad-norm
     metrics always evaluate the *global* objective (evaluation is not
     communication).
+
+    Compression routes through the config's ``repro.comm`` codec: the step
+    encodes each client's direction (per-client keys only when the codec is
+    stochastic — plain FedNew never touches the PRNG), aggregates the PS-side
+    ``decode`` of the wire payload, and updates ``state.comm``. The identity
+    codec reproduces pre-codec FedNew and ``bits=b`` (the stoch_quant codec)
+    reproduces Q-FedNew bit for bit (pinned in tests/test_comm.py).
     """
     # Engine contract: a sharded caller passes an obj already bound to this
     # axis (with_axis is idempotent then); the rebind here covers direct
@@ -292,63 +334,53 @@ def step(
 
     g_i = obj.local_grad(state.x, data)  # (n, d) — never transmitted
 
-    if cfg.bits is None:
-        ap = admm.one_pass(
-            g_i, state.lam, state.y, cfg.rho,
-            lambda r: _local_solve(curv, r, cfg, obj, data), axis_name=axis_name,
-            weights=mask,
-        )
-        y_i_tx, y, lam, y_hat = ap.y_i, ap.y, ap.lam, state.y_hat
-        key = state.key
-        # uplink = the full-precision y_i, at the width it is transmitted
-        if mask is None:
-            bits = payload_bits_array(
-                exact_payload_bits(data.dim, word_bits(y_i_tx))
-            )
-        else:
-            bits = _masked_bits(
-                exact_payload_bits(data.dim, word_bits(y_i_tx)), mask, axis_name
-            )
-    else:
-        # Q-FedNew: solve eq. 9, quantize the transmitted vector, and run the
-        # aggregation + dual update on the *quantized* y_i so that the
-        # sum-lambda invariant is preserved (clients know their own y_hat).
-        rhs = admm.admm_rhs(g_i, state.lam, jnp.broadcast_to(state.y, g_i.shape), cfg.rho)
-        y_i = _local_solve(curv, rhs, cfg, obj, data)
+    # -- eq. 9: client sub-problem solve ------------------------------------
+    rhs = admm.admm_rhs(
+        g_i, state.lam, jnp.broadcast_to(state.y, g_i.shape), cfg.rho
+    )
+    y_i = _local_solve(curv, rhs, cfg, obj, data)
+
+    # -- uplink compression (repro.comm codec) ------------------------------
+    # Encode client-side, aggregate the PS-side decode: eq. 13 and the dual
+    # update run on the *reconstructed* y_i so the sum-lambda invariant holds
+    # (every client knows its own reconstruction). Deterministic codecs never
+    # touch the PRNG — plain FedNew's key stays bit-frozen, as it always was.
+    codec = cfg.build_codec()
+    if codec.needs_rng:
         key, sub = jax.random.split(state.key)
-        n_local = y_i.shape[0]
-        if axis_name is None:
-            keys = jax.random.split(sub, n_local)
-        else:
-            # Split for ALL clients, slice this shard's rows: identical keys
-            # to the single-device run, whatever the client-axis layout.
-            if n_global_clients is None:
-                raise ValueError("sharded Q-FedNew needs static n_global_clients")
-            keys = jax.random.split(sub, n_global_clients)
-            start = jax.lax.axis_index(axis_name) * n_local
-            keys = jax.lax.dynamic_slice_in_dim(keys, start, n_local)
-        qr = dispatch.quantize_with_keys(
-            keys, y_i, state.y_hat, cfg.bits,
-            backend=cfg.resolved_quant_backend,
-        )
-        if mask is None:
-            y_i_tx, y_hat = qr.y_hat, qr.y_hat
-            y = admm.tree_mean_clients(y_i_tx, axis_name)
-            lam = state.lam + cfg.rho * (y_i_tx - y)
-            bits = payload_bits_array(payload_bits(cfg.bits, data.dim))
-        else:
-            # Sampled clients quantize and transmit; the rest keep their
-            # error-feedback state y_hat (they quantized nothing this round).
-            y_hat = _mask_rows(mask, qr.y_hat, state.y_hat)
-            y_i_tx = y_hat
-            y = admm.tree_mean_clients(y_i_tx, axis_name, weights=mask)
-            lam = admm.dual_update(state.lam, y_i_tx, y, cfg.rho, weights=mask)
-            bits = _masked_bits(payload_bits(cfg.bits, data.dim), mask, axis_name)
+        keys = _client_keys(sub, y_i.shape[0], axis_name, n_global_clients)
+    else:
+        key, keys = state.key, None
+    wire = codec.encode(keys, y_i, state.comm, state.step)
+    y_i_tx = codec.decode(wire, state.comm, state.step)
+    comm_state = codec.update_state(y_i_tx, y_i, state.comm, state.step)
+    if mask is not None:
+        # Sampled clients advance their codec state (ŷ / EF residual); the
+        # rest encoded nothing this round and keep it stale. Their y_i_tx
+        # rows are irrelevant: the weighted aggregates zero them out.
+        comm_state = _mask_rows(mask, comm_state, state.comm)
+
+    # -- eqs. 13 + 12: the ONLY communication + dual update -----------------
+    y = admm.tree_mean_clients(y_i_tx, axis_name, weights=mask)
+    lam = admm.dual_update(
+        state.lam, y_i_tx, jnp.broadcast_to(y, y_i_tx.shape), cfg.rho,
+        weights=mask,
+    )
+
+    # -- exact uplink accounting --------------------------------------------
+    bits = codec.payload_bits_metric(
+        data.dim, word_bits(y_i_tx), state.step
+    )
+    if mask is not None:
+        from repro.core import participation
+
+        bits = participation.masked_bits_metric(bits, mask, axis_name)
 
     x = state.x - y  # outer Newton step (eq. 14)
 
     new_state = FedNewState(
-        x=x, y=y, lam=lam, curv=curv, y_hat=y_hat, key=key, step=state.step + 1
+        x=x, y=y, lam=lam, curv=curv, comm=comm_state, key=key,
+        step=state.step + 1,
     )
     metrics = StepMetrics(
         loss=obj.global_loss(x, data),
@@ -364,12 +396,18 @@ def solver(cfg: FedNewConfig):
     """This algorithm as a ``repro.core.engine.FederatedSolver``."""
     from repro.core import engine
 
-    name = f"q-fednew({cfg.bits}b)" if cfg.bits else "fednew"
+    codec_name = cfg.codec_spec["name"]
+    if cfg.bits:
+        name = f"q-fednew({cfg.bits}b)"
+    elif codec_name != "identity":
+        name = f"fednew+{codec_name}"
+    else:
+        name = "fednew"
     return engine.FederatedSolver(
         name=name,
         init=lambda obj, data, key, x0=None: init(obj, data, cfg, key, x0),
         step=lambda state, obj, data, **axis_kw: step(state, obj, data, cfg, **axis_kw),
-        client_fields=("lam", "curv", "y_hat"),
+        client_fields=("lam", "curv", "comm"),
     )
 
 

@@ -28,10 +28,10 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import comm
 from repro.configs.base import FedConfig
 from repro.core import quantization
 from repro.core.hvp import cg_solve, tree_dot
-from repro.kernels import dispatch
 
 
 class FedNewHFState(NamedTuple):
@@ -77,23 +77,15 @@ def init(params, fed: FedConfig, n_clients: int) -> FedNewHFState:
 
 
 def _quantize_clients(key, y_i, y_hat_prev, bits: int, backend: str = "auto"):
-    """Leaf-wise stochastic quantization of every client's direction (paper
-    eqs. 25-30 applied per tensor; one range scalar per (client, leaf)).
-    Each ``(n_clients, leaf_size)`` block goes through the dispatch layer,
-    so on TPU it is one 2-D Pallas grid per leaf instead of a vmapped jnp
-    pass; key-splitting is identical across backends (bit-exact contract)."""
-    leaves, treedef = jax.tree.flatten(y_i)
-    prev = jax.tree.leaves(y_hat_prev)
-    out = []
-    for j, (l, p) in enumerate(zip(leaves, prev)):
-        kj = jax.random.fold_in(key, j)
-        n = l.shape[0]
-        flat = l.reshape(n, -1)
-        res = dispatch.quantize_batch(
-            kj, flat, p.reshape(n, -1), bits, backend=backend
-        )
-        out.append(res.y_hat.reshape(l.shape).astype(l.dtype))
-    return jax.tree.unflatten(treedef, out)
+    """Leaf-wise stochastic quantization of every client's direction —
+    a thin wrapper over ``repro.comm.encode_decode_tree`` (one codec
+    application per (client, leaf) block through the dispatch layer;
+    key-splitting identical across backends, the PR-2 bit-exact contract)."""
+    codec = comm.build_codec(
+        {"name": "stoch_quant", "bits": bits}, backend=backend
+    )
+    y_tx, _ = comm.encode_decode_tree(codec, key, y_i, y_hat_prev)
+    return y_tx
 
 
 def make_step_federated(
@@ -228,17 +220,13 @@ def _uplink_bits(params, y_tx, fed: FedConfig) -> jax.Array:
 
 def _quantize_one(key, y, y_hat_prev, bits: int, backend: str = "auto"):
     """Leaf-wise quantization for a single client's direction tree (the
-    shard_map path: one client per shard, so leaves are 1-D dispatches)."""
-    leaves, treedef = jax.tree.flatten(y)
-    prev = jax.tree.leaves(y_hat_prev)
-    out = []
-    for j, (l, p) in enumerate(zip(leaves, prev)):
-        kj = jax.random.fold_in(key, j)
-        res = dispatch.quantize(
-            kj, l.reshape(-1), p.reshape(-1), bits, backend=backend
-        )
-        out.append(res.y_hat.reshape(l.shape).astype(l.dtype))
-    return jax.tree.unflatten(treedef, out)
+    shard_map path: one client per shard) via
+    ``repro.comm.encode_decode_tree_one``."""
+    codec = comm.build_codec(
+        {"name": "stoch_quant", "bits": bits}, backend=backend
+    )
+    y_tx, _ = comm.encode_decode_tree_one(codec, key, y, y_hat_prev)
+    return y_tx
 
 
 def make_step(

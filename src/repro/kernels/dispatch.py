@@ -156,8 +156,11 @@ def quantize(key, y, y_hat_prev, bits: int, *, backend: str = "auto"):
 
 def quantize_with_keys(keys, y, y_hat_prev, bits: int, *, backend: str = "auto"):
     """Batched eq. 25-30 over a leading client axis with caller-supplied
-    per-client keys — the engine's Q-FedNew hot loop. The Pallas route runs
-    one 2-D ``(clients, blocks)`` grid over the whole shard-local batch."""
+    per-client keys — the engine's Q-FedNew hot loop, reached through the
+    ``repro.comm`` stoch_quant codec (which keeps the integer levels as the
+    wire payload and reconstructs ŷ itself so client and server agree bit
+    for bit). The Pallas route runs one 2-D ``(clients, blocks)`` grid over
+    the whole shard-local batch."""
     fn, resolved = resolve_impl("stoch_quant", backend)
     if use_pallas(resolved):
         return fn(keys, y, y_hat_prev, bits, interpret=interpret_flag(resolved))

@@ -262,7 +262,7 @@ def _first_empty_round(part: pl.Participation, n: int, rounds: int):
 ], ids=["fednew", "q-fednew"])
 def test_empty_round_freezes_state_end_to_end(mesh_devices, solver, hp):
     """An all-zero Bernoulli round must be a frozen no-op all the way
-    through the engine: finite metrics, x unchanged, lam/y_hat/curv
+    through the engine: finite metrics, x unchanged, lam/comm/curv
     untouched, 0 bits charged — under scan AND shard_map."""
     n = 10
     part = empty_r = None
@@ -290,7 +290,7 @@ def test_empty_round_freezes_state_end_to_end(mesh_devices, solver, hp):
     # host replay confirms the round really was empty
     assert pl.sampled_counts(part, empty_r + 1, n)[empty_r] == 0
 
-    for field in ("x", "lam", "y_hat", "curv"):
+    for field in ("x", "lam", "comm", "curv"):
         np.testing.assert_array_equal(
             np.asarray(getattr(before, field)),
             np.asarray(getattr(after, field)),
@@ -376,6 +376,16 @@ def test_spec_json_round_trip():
     )
     assert api.ExperimentSpec.from_json(spec.to_json()) == spec
     assert spec.to_dict()["schema_version"] == api.SCHEMA_VERSION
+    # the optional comm sections round-trip too (null and populated)
+    assert spec.to_dict()["compression"] is None
+    comm_spec = api.ExperimentSpec(
+        solver=api.SolverSpec("fednew", {"rho": 0.1, "alpha": 0.03}),
+        compression=api.CompressionSpec(
+            codec="topk", params={"fraction": 0.1, "value_bits": 32}
+        ),
+        network=api.NetworkSpec(heterogeneity="lognormal", sigma=0.5),
+    )
+    assert api.ExperimentSpec.from_json(comm_spec.to_json()) == comm_spec
 
 
 @settings(max_examples=25, deadline=None)

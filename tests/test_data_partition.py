@@ -42,6 +42,48 @@ def test_dirichlet_alpha_controls_skew():
     assert frac(skewed).std() > 3 * frac(mixed).std()
 
 
+def test_dirichlet_every_sample_assigned_exactly_once():
+    """The generator fills every (client, sample) slot exactly once: no
+    NaN/inf placeholders, no unlabeled rows, and the per-client counts are
+    exactly m — the label-skew law reweights classes, it never drops or
+    duplicates samples."""
+    d = make_dirichlet_dataset(SPEC, jax.random.PRNGKey(9), alpha=0.3)
+    feats, labels = np.asarray(d.features), np.asarray(d.labels)
+    assert np.isfinite(feats).all() and np.isfinite(labels).all()
+    # every slot carries a definite class — exactly one of {-1, +1}
+    assert np.all(np.abs(labels) == 1.0)
+    n, m = labels.shape
+    assert (n, m) == (SPEC.n_clients, SPEC.samples_per_client)
+    per_client = np.sum(labels == 1.0, axis=1) + np.sum(labels == -1.0, axis=1)
+    np.testing.assert_array_equal(per_client, np.full(n, m))
+    # total assignments across the federation: n*m, no more, no less
+    assert int(per_client.sum()) == n * m
+
+
+def test_dirichlet_skew_nondegenerate_across_alphas():
+    """alpha in {0.1, 1.0, 100.0}: per-client class-mix spread decreases
+    monotonically in alpha, and every setting still produces BOTH classes
+    globally (skewed, not degenerate)."""
+    key = jax.random.PRNGKey(11)
+    spreads = {}
+    for alpha in (0.1, 1.0, 100.0):
+        d = make_dirichlet_dataset(SPEC, key, alpha=alpha)
+        labels = np.asarray(d.labels)
+        pos_frac = (labels > 0).mean(axis=1)
+        spreads[alpha] = pos_frac.std()
+        # globally non-degenerate: both classes exist at every alpha
+        assert 0.0 < (labels > 0).mean() < 1.0, alpha
+    assert spreads[0.1] > spreads[1.0] > spreads[100.0]
+    # strong skew regime: some clients are near-single-class...
+    d_skew = make_dirichlet_dataset(SPEC, key, alpha=0.1)
+    frac_skew = (np.asarray(d_skew.labels) > 0).mean(axis=1)
+    assert (np.minimum(frac_skew, 1 - frac_skew) < 0.1).any()
+    # ...while alpha=100 clients all hover near the global mix
+    d_mix = make_dirichlet_dataset(SPEC, key, alpha=100.0)
+    frac_mix = (np.asarray(d_mix.labels) > 0).mean(axis=1)
+    assert np.all(np.abs(frac_mix - frac_mix.mean()) < 0.25)
+
+
 def test_dirichlet_rejects_bad_alpha():
     with pytest.raises(ValueError, match="alpha"):
         make_dirichlet_dataset(SPEC, jax.random.PRNGKey(0), alpha=0.0)
