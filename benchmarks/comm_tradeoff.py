@@ -23,7 +23,7 @@ import dataclasses
 import os
 from typing import Optional
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, rounds_to_rel_gap, save_json
 from repro import api
 from repro.core import baselines
 
@@ -82,15 +82,6 @@ def base_spec() -> api.ExperimentSpec:
         schedule=api.ScheduleSpec(rounds=ROUNDS),
         network=NETWORK,
     )
-
-
-def rounds_to_rel_gap(losses, f_star: float, rel: float) -> int:
-    """First 1-based round whose loss is within ``rel`` of f*; -1 if never."""
-    target = f_star + rel * abs(f_star)
-    for r, loss in enumerate(losses):
-        if loss <= target:
-            return r + 1
-    return -1
 
 
 def run_one(base, label, codec, hp, fraction, f_star):

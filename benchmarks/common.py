@@ -31,6 +31,17 @@ def save_json(name: str, payload) -> str:
     return path
 
 
+def rounds_to_rel_gap(losses, f_star: float, rel: float) -> int:
+    """First 1-based round whose loss is within ``rel`` of f*; -1 if never.
+    (Shared by the comm_tradeoff and solver_frontier suites — both price
+    their frontiers at the same relative-gap target.)"""
+    target = f_star + rel * abs(f_star)
+    for r, loss in enumerate(losses):
+        if loss <= target:
+            return r + 1
+    return -1
+
+
 def rounds_to_gap(losses, f_star, target: float) -> int:
     """First round index whose optimality gap <= target (or -1)."""
     gaps = jnp.asarray(losses) - f_star

@@ -1,0 +1,68 @@
+"""Schema assertion for the benchmarks/solver_frontier.py artifact.
+
+Used two ways:
+  * CI smoke leg: ``python scripts/check_frontier_artifact.py \
+    benchmarks/out/solver_frontier.json`` after running the suite with
+    ``SOLVER_SMOKE=1``;
+  * tests/test_solver_zoo.py-adjacent smoke in CI calls :func:`check_payload`
+    on the in-process result.
+
+Checks structure and exact-ledger typing (bit counts must be ints, not
+floats), not benchmark outcomes — the full suite enforces those itself.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+_RUN_KEYS = {
+    "label", "solver", "codec", "participation", "solver_hparams",
+    "final_rel_gap", "rounds_to_target", "uplink_bits_per_client_to_target",
+    "cumulative_uplink_bits_per_client", "cumulative_downlink_bits_total",
+    "simulated_time_s", "simulated_time_to_target_s", "frontier",
+}
+_FRONTIER_KEYS = {"rel_gap", "sim_time_s", "uplink_bits_per_client"}
+_HEADLINE_KEYS = {
+    "target_rel_gap", "newton_bits_per_client", "best_zoo_bits_per_client",
+    "best_zoo_label", "ratio", "pass",
+}
+
+
+def check_payload(payload: dict) -> None:
+    """Raise AssertionError if the artifact doesn't match the schema."""
+    assert set(payload) == {"config", "runs", "zoo_vs_newton"}, sorted(payload)
+    cfg = payload["config"]
+    for key in ("smoke", "rounds", "f_star", "dataset", "dim", "n_clients",
+                "participations", "network"):
+        assert key in cfg, f"config missing {key!r}"
+    assert isinstance(cfg["rounds"], int) and cfg["rounds"] > 0
+    assert payload["runs"], "no runs recorded"
+    solvers = set()
+    for run in payload["runs"]:
+        assert set(run) == _RUN_KEYS, (run.get("label"), sorted(run))
+        assert set(run["frontier"]) == _FRONTIER_KEYS
+        lengths = {len(v) for v in run["frontier"].values()}
+        assert lengths == {cfg["rounds"]}, (run["label"], lengths)
+        assert isinstance(run["cumulative_downlink_bits_total"], int), (
+            "downlink ledger must stay an exact int"
+        )
+        assert run["simulated_time_s"] > 0
+        solvers.add(run["solver"].split("+")[0])
+    # the frontier is CROSS-solver by definition: one solver sweeping its
+    # codec is comm_tradeoff's job, not this suite's
+    assert len(solvers) >= 3, f"frontier covers too few solvers: {solvers}"
+    headline = payload["zoo_vs_newton"]
+    assert set(headline) == _HEADLINE_KEYS, sorted(headline)
+    if not cfg["smoke"]:
+        assert headline["pass"] is True, headline
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        check_payload(json.load(f))
+    print(f"solver_frontier artifact OK: {path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

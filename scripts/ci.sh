@@ -45,3 +45,17 @@ python -m repro.api examples/specs/float64_smoke.json \
 # simulated-time plumbing cannot silently rot.
 COMM_SMOKE=1 BENCH_ROUNDS=4 python -m benchmarks.run --only comm_tradeoff
 python scripts/check_comm_artifact.py benchmarks/out/comm_tradeoff.json
+
+# Solver-conformance leg: the registry-wide battery (scan-vs-host,
+# shard_map-vs-scan, empty-round freeze, fraction=1.0 short-circuit, exact
+# ledger/metric agreement) on a forced 8-device host mesh, so the sharded
+# schedule runs with a real 8-way client axis instead of the size-1 axis a
+# 1-CPU runner would give it.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_solver_conformance.py
+
+# Cross-solver frontier smoke leg: solver x codec x participation sweep at
+# tiny dims through the real harness, schema-checked — the zoo's exact
+# ledgers, netsim pricing, and the frontier artifact cannot silently rot.
+SOLVER_SMOKE=1 BENCH_ROUNDS=4 python -m benchmarks.run --only solver_frontier
+python scripts/check_frontier_artifact.py benchmarks/out/solver_frontier.json

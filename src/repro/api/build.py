@@ -100,21 +100,27 @@ def build_solver(
 
 
 def build_run_codec(spec: ExperimentSpec):
-    """The ``repro.comm`` codec a fednew-family run transmits through — the
-    single accounting authority for the exact uplink ledger (``None`` for
-    solvers with their own fixed payloads, e.g. the Newton baselines)."""
-    if spec.solver.name not in ("fednew", "q-fednew"):
-        return None
-    from repro.core import fednew
-
+    """The ``repro.comm`` codec a codec-carrying run transmits through
+    (``None`` for solvers with fixed payloads, e.g. the Newton baselines).
+    Exact bit accounting itself lives in ``engine.solver_ledger`` — this
+    helper remains for callers that inspect the codec object (specs, state
+    widths)."""
     hparams = _merged_solver_hparams(spec.solver, spec.compression)
-    return fednew.FedNewConfig(**hparams).build_codec()
+    if spec.solver.name in ("fednew", "q-fednew"):
+        from repro.core import fednew
+
+        return fednew.FedNewConfig(**hparams).build_codec()
+    if spec.solver.name == "fednl":
+        from repro.core import fednl
+
+        return fednl.FedNLConfig(**hparams).build_codec()
+    return None
 
 
 def check_solver_objective(spec: ExperimentSpec, obj: objectives.Objective):
     """Cross-section validation the frozen specs can't do alone: the
-    matrix-free solve path needs an objective that ships a ``local_hvp``
-    oracle (both built-in kinds do; this guards future objective kinds and
+    matrix-free paths need an objective that ships a ``local_hvp`` oracle
+    (both built-in kinds do; this guards future objective kinds and
     hand-built ``run_components`` objectives routed through specs)."""
     if (
         spec.solver.hparams.get("hessian_repr") == "matfree"
@@ -123,6 +129,12 @@ def check_solver_objective(spec: ExperimentSpec, obj: objectives.Objective):
         raise ValueError(
             f"solver hparams ask for hessian_repr='matfree' but the "
             f"{spec.objective.kind!r} objective provides no local_hvp oracle"
+        )
+    if spec.solver.name == "fagh" and not obj.has_hvp:
+        raise ValueError(
+            f"solver 'fagh' spends one local_hvp per client per round but "
+            f"the {spec.objective.kind!r} objective provides no local_hvp "
+            f"oracle"
         )
 
 

@@ -23,7 +23,7 @@ import numpy as np
 from repro.api import build
 from repro.api.specs import ExperimentSpec
 from repro.core import engine, participation as participation_lib
-from repro.core.quantization import exact_payload_bits, word_bits
+from repro.core.quantization import word_bits
 
 
 class LedgerJSONEncoder(json.JSONEncoder):
@@ -127,34 +127,37 @@ class RunResult:
         return path
 
 
+def _run_ledger(spec: ExperimentSpec) -> engine.SolverLedger:
+    """The solver's exact bit-accounting object, built from the SAME merged
+    hparams as the solver that runs (``CompressionSpec`` folded into the
+    ``codec`` hparam) — the registry is the one accounting authority, so
+    the ledger and the step's traced metric cannot drift. Adding a solver
+    to ``engine._registry`` with a ``ledger`` factory is all it takes for
+    this runner to account it."""
+    return engine.solver_ledger(
+        spec.solver.name,
+        **build._merged_solver_hparams(spec.solver, spec.compression),
+    )
+
+
 def _per_round_payload_bits(
     spec: ExperimentSpec, d: int, word: int, rounds: int
 ) -> List[int]:
     """Exact bits ONE sampled client uploads in each round, as Python ints
     (mirrors each step's metric expression; pinned against the traced
-    metric in tests/test_api.py). fednew-family solvers delegate to their
-    ``repro.comm`` codec — the same object whose ``payload_bits_metric``
-    the compiled step emits — so the ledger and the metric cannot drift."""
-    solver_name = spec.solver.name
-    codec = build.build_run_codec(spec)
-    if codec is not None:
-        return [codec.payload_bits(d, word, r) for r in range(rounds)]
-    if solver_name == "fedgd":
-        return [exact_payload_bits(d, word)] * rounds
-    if solver_name == "newton-zero":
-        first = exact_payload_bits(d * d + d, word)
-        rest = exact_payload_bits(d, word)
-        return [first] + [rest] * (rounds - 1)
-    if solver_name == "newton":
-        return [exact_payload_bits(d * d + d, word)] * rounds
-    raise KeyError(f"no uplink accounting for solver {solver_name!r}")
+    metric in tests/test_api.py and the conformance suite)."""
+    uplink = _run_ledger(spec).uplink
+    return [uplink(d, word, r) for r in range(rounds)]
 
 
-def _per_round_downlink_bits(d: int, word: int, rounds: int) -> List[int]:
-    """Exact bits the PS sends ONE sampled client per round: the broadcast
-    of the current iterate x^k at the transmitted word size (every solver
-    here broadcasts exactly the d-vector — Hessians never go downlink)."""
-    return [exact_payload_bits(d, word)] * rounds
+def _per_round_downlink_bits(
+    spec: ExperimentSpec, d: int, word: int, rounds: int
+) -> List[int]:
+    """Exact bits the PS sends ONE sampled client per round — per-solver
+    (most broadcast the d-vector iterate; fagh also downlinks the momentum
+    direction its phase-2 HVP probes)."""
+    downlink = _run_ledger(spec).downlink
+    return [downlink(d, word, r) for r in range(rounds)]
 
 
 def _transmitted_word_bits(data) -> int:
@@ -222,7 +225,7 @@ def run(spec: ExperimentSpec) -> RunResult:
     word = _transmitted_word_bits(data)
     counts = participation_lib.sampled_counts(part, sched.rounds, n)
     payloads = _per_round_payload_bits(spec, data.dim, word, sched.rounds)
-    down_payloads = _per_round_downlink_bits(data.dim, word, sched.rounds)
+    down_payloads = _per_round_downlink_bits(spec, data.dim, word, sched.rounds)
     totals = [p * c for p, c in zip(payloads, counts)]
     down_totals = [p * c for p, c in zip(down_payloads, counts)]
 

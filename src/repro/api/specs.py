@@ -368,11 +368,11 @@ class ExperimentSpec:
                 "quadratic objectives support only partition scheme='iid'"
             )
         if self.compression is not None:
-            if self.solver.name != "fednew":
+            if self.solver.name not in ("fednew", "fednl"):
                 raise ValueError(
-                    "compression= applies to solver 'fednew' only (q-fednew "
-                    f"is fednew + the stoch_quant codec), got solver "
-                    f"{self.solver.name!r}"
+                    "compression= applies to the codec-carrying solvers "
+                    "'fednew' and 'fednl' only (q-fednew is fednew + the "
+                    f"stoch_quant codec), got solver {self.solver.name!r}"
                 )
             clash = [k for k in ("bits", "codec") if k in self.solver.hparams]
             if clash:

@@ -24,6 +24,7 @@ from repro.comm.codecs import (
     StochQuantCodec,
     TopKCodec,
     build_codec,
+    client_keys,
     codec_names,
     encode_decode_tree,
     encode_decode_tree_one,
@@ -44,6 +45,7 @@ __all__ = [
     "TopKCodec",
     "BitScheduleCodec",
     "build_codec",
+    "client_keys",
     "codec_names",
     "normalize_spec",
     "register_codec",

@@ -430,6 +430,22 @@ class BitScheduleCodec(Codec):
         return y_tx  # every stage is a stoch_quant: ŷ := the reconstruction
 
 
+def client_keys(sub, n_local: int, axis_name, n_global_clients):
+    """Per-client PRNG keys for a stochastic codec, identical across
+    schedules: split for ALL clients and slice this shard's rows, so the
+    client-axis layout never changes the randomness. (Historically
+    ``fednew._client_keys``; shared here because every solver that encodes
+    through an RNG codec — fednew, fednl — needs the same device-count
+    invariance.)"""
+    if axis_name is None:
+        return jax.random.split(sub, n_local)
+    if n_global_clients is None:
+        raise ValueError("sharded codec encoding needs static n_global_clients")
+    keys = jax.random.split(sub, n_global_clients)
+    start = jax.lax.axis_index(axis_name) * n_local
+    return jax.lax.dynamic_slice_in_dim(keys, start, n_local)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------

@@ -206,6 +206,48 @@ def newton_solver():
     return _solver("newton", newton_init, newton_step, None)
 
 
+# ---------------------------------------------------------------------------
+# exact bit ledgers (engine.SolverLedger factories; see docs/solvers.md)
+# ---------------------------------------------------------------------------
+
+
+def fedgd_ledger(cfg: FedGDConfig = FedGDConfig()):
+    """Gradient up, iterate down: ``word*d`` each way, every round."""
+    from repro.core import engine
+
+    del cfg
+    vec = lambda d, word, round_index: exact_payload_bits(d, word)
+    return engine.SolverLedger(uplink=vec, downlink=vec)
+
+
+def newton_zero_ledger(cfg: NewtonZeroConfig = NewtonZeroConfig()):
+    """Round 0 pays the one-shot full-Hessian upload on top of the gradient;
+    every later round is gradient-only. Downlink: the iterate."""
+    from repro.core import engine
+
+    del cfg
+
+    def uplink(d: int, word: int, round_index: int) -> int:
+        if round_index == 0:
+            return exact_payload_bits(d * d + d, word)
+        return exact_payload_bits(d, word)
+
+    return engine.SolverLedger(
+        uplink=uplink,
+        downlink=lambda d, word, round_index: exact_payload_bits(d, word),
+    )
+
+
+def newton_ledger():
+    """Hessian + gradient up every round; the iterate down."""
+    from repro.core import engine
+
+    return engine.SolverLedger(
+        uplink=lambda d, word, round_index: exact_payload_bits(d * d + d, word),
+        downlink=lambda d, word, round_index: exact_payload_bits(d, word),
+    )
+
+
 def run_simple(init_fn, step_fn, obj, data, cfg, rounds: int, x0=None):
     """Legacy driver: thin wrapper over the engine's host-loop mode
     (bit-identical to the historical one-jitted-step-per-round loop)."""

@@ -75,33 +75,75 @@ class FederatedSolver:
     client_fields: Tuple[str, ...] = ()
 
 
-def _registry() -> dict:
-    """name -> (factory(**hparams) -> FederatedSolver, config dataclass or
-    None). Hparams are validated against the config dataclass's fields
-    before construction, so typos surface as named errors instead of opaque
-    dataclass ``TypeError``s."""
-    from repro.core import baselines, fednew
+@dataclasses.dataclass(frozen=True)
+class SolverLedger:
+    """Exact per-message communication accounting for one configured solver.
 
+    ``uplink(d, word, round_index)`` / ``downlink(d, word, round_index)``
+    return the bits ONE sampled client sends/receives in round
+    ``round_index`` for a d-parameter model transmitted at ``word`` bits per
+    element — as exact Python ints (arbitrary precision, no float
+    round-trip; the PR-2 contract). Round-indexed so one-shot charges
+    (Newton-Zero's round-0 Hessian, FedNL's ``init_hessian="exact"`` seed)
+    and schedules (``bit_schedule``) stay exact per round. ``repro.api``'s
+    cumulative ledgers are sums of these over the replayed participation
+    masks."""
+
+    uplink: Callable[[int, int, int], int]
+    downlink: Callable[[int, int, int], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    """One registry row: how to build a solver, validate its hparams, and
+    account its communication.
+
+    factory(**hparams)  -> FederatedSolver
+    config_cls          config dataclass whose fields are the valid hparams
+                        (None for config-less solvers like ``newton``)
+    ledger(**hparams)   -> SolverLedger for that configuration
+    """
+
+    factory: Callable[..., "FederatedSolver"]
+    config_cls: Optional[type]
+    ledger: Callable[..., SolverLedger]
+
+
+def _registry() -> dict:
+    """name -> :class:`SolverEntry`. Hparams are validated against the
+    config dataclass's fields before construction, so typos surface as named
+    errors instead of opaque dataclass ``TypeError``s."""
+    from repro.core import baselines, fagh, fednew, fednl, fedns
+
+    def entry(factory, cfg_cls, ledger):
+        if cfg_cls is None:
+            return SolverEntry(
+                factory=lambda **hp: factory(),
+                config_cls=None,
+                ledger=lambda **hp: ledger(),
+            )
+        return SolverEntry(
+            factory=lambda **hp: factory(cfg_cls(**hp)),
+            config_cls=cfg_cls,
+            ledger=lambda **hp: ledger(cfg_cls(**hp)),
+        )
+
+    fednew_entry = entry(fednew.solver, fednew.FedNewConfig, fednew.ledger)
     return {
-        "fednew": (
-            lambda **hp: fednew.solver(fednew.FedNewConfig(**hp)),
-            fednew.FedNewConfig,
+        "fednew": fednew_entry,
+        "q-fednew": fednew_entry,
+        "fednl": entry(fednl.solver, fednl.FedNLConfig, fednl.ledger),
+        "fedns": entry(fedns.solver, fedns.FedNSConfig, fedns.ledger),
+        "fagh": entry(fagh.solver, fagh.FAGHConfig, fagh.ledger),
+        "fedgd": entry(
+            baselines.fedgd_solver, baselines.FedGDConfig, baselines.fedgd_ledger
         ),
-        "q-fednew": (
-            lambda **hp: fednew.solver(fednew.FedNewConfig(**hp)),
-            fednew.FedNewConfig,
-        ),
-        "fedgd": (
-            lambda **hp: baselines.fedgd_solver(baselines.FedGDConfig(**hp)),
-            baselines.FedGDConfig,
-        ),
-        "newton-zero": (
-            lambda **hp: baselines.newton_zero_solver(
-                baselines.NewtonZeroConfig(**hp)
-            ),
+        "newton-zero": entry(
+            baselines.newton_zero_solver,
             baselines.NewtonZeroConfig,
+            baselines.newton_zero_ledger,
         ),
-        "newton": (lambda **hp: baselines.newton_solver(), None),
+        "newton": entry(baselines.newton_solver, None, baselines.newton_ledger),
     }
 
 
@@ -125,7 +167,7 @@ def solver_hparam_names(name: str) -> Tuple[str, ...]:
             f"unknown solver {name!r}; registered solvers: "
             f"{', '.join(sorted(reg))}"
         )
-    _, cfg_cls = reg[key]
+    cfg_cls = reg[key].config_cls
     if cfg_cls is None:
         return ()
     return tuple(f.name for f in dataclasses.fields(cfg_cls))
@@ -145,15 +187,25 @@ def validate_solver_hparams(name: str, **hparams) -> None:
             f"solver {key!r} got unknown hparam(s) {unknown}; valid hparams: "
             f"{list(valid) if valid else '<none>'}"
         )
-    _, cfg_cls = _registry()[key]
+    cfg_cls = _registry()[key].config_cls
     if cfg_cls is not None:
         cfg_cls(**hparams)
 
 
 def get_solver(name: str, **hparams) -> FederatedSolver:
     """Solver registry: ``fednew`` / ``q-fednew`` (needs ``bits``) /
-    ``fedgd`` / ``newton-zero`` / ``newton``. ``hparams`` feed the method's
-    config dataclass (e.g. ``rho=0.1, alpha=0.03, hessian_period=10``).
+    ``fednl`` / ``fedns`` / ``fagh`` / ``fedgd`` / ``newton-zero`` /
+    ``newton``. ``hparams`` feed the method's config dataclass (e.g.
+    ``rho=0.1, alpha=0.03, hessian_period=10``).
+
+    The second-order zoo (see docs/solvers.md for the update rules and bit
+    formulas): ``fednl`` maintains per-client Hessian estimates via
+    compressed corrections (``codec=`` takes any ``repro.comm`` spec, same
+    as fednew), ``fedns`` uplinks ``sketch_size``-column Nystrom sketches of
+    the local Hessians, and ``fagh`` spends exactly one ``local_hvp`` per
+    client per round to maintain an approximate global-Hessian direction
+    (needs an Objective with the HVP oracle, like ``hessian_repr=
+    "matfree"``).
 
     FedNew/Q-FedNew accept ``backend="auto"|"pallas"|"reference"`` (plus
     per-loop ``solve_backend``/``quant_backend`` overrides): the eq. 9
@@ -182,8 +234,22 @@ def get_solver(name: str, **hparams) -> FederatedSolver:
     validate_solver_hparams(key, **hparams)
     if key == "q-fednew" and not hparams.get("bits"):
         raise ValueError("q-fednew requires bits=<int>")
-    factory, _ = _registry()[key]
-    return factory(**hparams)
+    return _registry()[key].factory(**hparams)
+
+
+def solver_ledger(name: str, **hparams) -> SolverLedger:
+    """Exact bit accounting for a configured solver, by registry name.
+
+    Validates ``hparams`` exactly like :func:`get_solver` (same named
+    errors), then builds the solver's :class:`SolverLedger`. This is the one
+    authority ``repro.api``'s cumulative uplink/downlink ledgers consume —
+    adding a solver to the registry with a ``ledger`` factory is all it
+    takes for ``api.run`` to account it."""
+    key = canonical_solver_name(name)
+    validate_solver_hparams(key, **hparams)
+    if key == "q-fednew" and not hparams.get("bits"):
+        raise ValueError("q-fednew requires bits=<int>")
+    return _registry()[key].ledger(**hparams)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,217 @@
+"""FAGH (arxiv 2403.11041): federated learning with the first moment of an
+approximated global Hessian — ONE Hessian-vector product per client per
+round.
+
+FAGH's bargain: get a curvature-adapted step without ever transmitting (or
+materializing) a Hessian. The round is a two-phase exchange:
+
+    phase 1   PS broadcasts x^k; clients upload gradients g_i(x^k)
+              m^{k+1} = beta m^k + (1-beta) g          (gradient first
+              mhat    = m^{k+1} / (1 - beta^{k+1})      moment + Adam-style
+                                                        bias correction)
+    phase 2   PS broadcasts the momentum direction mhat; each client
+              uploads ONE HVP  u_i = H_i(x^k) mhat  (``Objective.local_hvp``,
+              the matfree oracle from PR 4)
+              u       = masked client mean = Hbar mhat  (exact by linearity)
+              v^{k+1} = beta2 v^k + (1-beta2) u        (first moment of the
+              vhat    = v^{k+1} / (1 - beta2^{k+1})     global Hessian's
+                                                        action)
+    update    x^{k+1} = x^k - lr * (mhat.mhat) / (mhat.vhat + damping
+              mhat.mhat) * mhat
+
+The scalar ``mhat.vhat ≈ mhat^T Hbar mhat`` is the curvature along the
+momentum direction, so the step is an exact quadratic-model line search
+along mhat — Newton's step length in the one direction the round probed.
+``mhat.vhat`` is floored at 0 before the ``damping`` ridge is added: a
+stale Hessian moment (large ``beta2``) can make the EMA'd curvature
+negative, and the floor keeps the step bounded and forward instead of
+sign-flipped (the failure mode a raw 1/denominator guard turns into NaNs).
+
+No per-client state is carried (``client_fields = ()``); x, m, v are
+PS-side and replicated. Empty rounds are explicitly frozen: with no sampled
+clients there is no round message, so x / m / v must not drift — the step
+selects the stale values under ``sum(mask) == 0`` (the beta decays and bias
+divisors would otherwise move them silently). ``step`` still advances; it
+is clock state, not model state.
+
+Communication accounting (exact Python ints):
+
+    uplink    word * 2d   (gradient + HVP result)
+    downlink  word * 2d   (x in phase 1, mhat in phase 2 — the registry's
+                           one solver with a non-``word*d`` downlink, which
+                           keeps the per-solver downlink ledger honest)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm
+from repro.core.objectives import ClientDataset, Objective
+from repro.core.participation import masked_bits_metric
+from repro.core.quantization import (
+    exact_payload_bits,
+    payload_bits_array,
+    word_bits,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FAGHConfig:
+    lr: float = 0.5  # outer step scale on the line-searched momentum step
+    beta: float = 0.5  # gradient first-moment decay (bias-corrected)
+    beta2: float = 0.5  # Hessian-action first-moment decay (bias-corrected)
+    damping: float = 1e-3  # ridge on the curvature-along-momentum scalar
+
+    def __post_init__(self):
+        if self.lr <= 0:
+            raise ValueError(f"fagh lr must be positive, got {self.lr}")
+        if not (0.0 <= self.beta < 1.0):
+            raise ValueError(f"fagh beta must be in [0, 1), got {self.beta}")
+        if not (0.0 <= self.beta2 < 1.0):
+            raise ValueError(
+                f"fagh beta2 must be in [0, 1), got {self.beta2}"
+            )
+        if self.damping <= 0:
+            raise ValueError(
+                f"fagh damping must be positive, got {self.damping}"
+            )
+
+
+class FAGHState(NamedTuple):
+    x: jax.Array  # (d,) global model
+    m: jax.Array  # (d,) first moment of the gradient
+    v: jax.Array  # (d,) first moment of the global Hessian's action
+    step: jax.Array
+
+
+class FAGHMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    uplink_bits_per_client: jax.Array
+    direction_norm: jax.Array  # norm of the applied update lr * alpha * mhat
+
+
+def _check_hvp(obj: Objective) -> None:
+    if not obj.has_hvp:
+        raise ValueError(
+            "fagh spends exactly one HVP per client per round and needs an "
+            "Objective with a local_hvp oracle (objectives."
+            "logistic_regression / objectives.quadratic provide closed-form "
+            "ones); this objective has none"
+        )
+
+
+def init(
+    obj: Objective, data: ClientDataset, cfg: FAGHConfig, key: jax.Array,
+    x0=None,
+) -> FAGHState:
+    del cfg, key  # deterministic solver: no PRNG state carried
+    _check_hvp(obj)
+    d = data.dim
+    dtype = (
+        data.features.dtype
+        if data.features.dtype in (jnp.float32, jnp.float64)
+        else jnp.float32
+    )
+    x = jnp.zeros((d,), dtype) if x0 is None else jnp.asarray(x0, dtype)
+    return FAGHState(
+        x=x,
+        m=jnp.zeros((d,), dtype),
+        v=jnp.zeros((d,), dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def step(
+    state: FAGHState,
+    obj: Objective,
+    data: ClientDataset,
+    cfg: FAGHConfig,
+    *,
+    axis_name: Optional[str] = None,
+    n_global_clients: Optional[int] = None,
+    mask: Optional[jax.Array] = None,
+):
+    """One FAGH round (see module docstring for the update rule)."""
+    del n_global_clients  # no per-client PRNG: nothing to make shard-invariant
+    if axis_name is not None:
+        obj = obj.with_axis(axis_name)
+    _check_hvp(obj)
+    n_local = data.n_clients
+    d = data.dim
+    dtype = state.x.dtype
+    t1 = (state.step + 1).astype(dtype)
+
+    # Phase 1: gradients up, momentum direction formed PS-side.
+    g = obj.global_grad(state.x, data, weights=mask)
+    m = cfg.beta * state.m + (1.0 - cfg.beta) * g
+    mhat = m / (1.0 - jnp.power(jnp.asarray(cfg.beta, dtype), t1))
+
+    # Phase 2: the round's ONE HVP per client, against the broadcast mhat.
+    anchors = jnp.broadcast_to(state.x, (n_local, d))
+    u_i = obj.local_hvp(anchors, data, jnp.broadcast_to(mhat, (n_local, d)))
+    u = admm.tree_mean_clients(u_i, axis_name, weights=mask)  # = Hbar mhat
+    v = cfg.beta2 * state.v + (1.0 - cfg.beta2) * u
+    vhat = v / (1.0 - jnp.power(jnp.asarray(cfg.beta2, dtype), t1))
+
+    # Quadratic-model line search along mhat, curvature floored at 0.
+    mm = jnp.vdot(mhat, mhat)
+    denom = jnp.maximum(jnp.vdot(mhat, vhat), 0.0) + cfg.damping * mm
+    alpha = jnp.where(mm > 0, mm / denom, jnp.zeros_like(mm))
+    update = cfg.lr * alpha * mhat
+    x = state.x - update
+
+    # Empty round: no messages, so nothing — not even the moment decay —
+    # moves. (g and u are already 0 there, but the beta decays and bias
+    # divisors would still drift m/v, and alpha = 1/damping would move x.)
+    if mask is not None:
+        total = jnp.sum(mask)
+        if obj.axis_name is not None:
+            total = jax.lax.psum(total, obj.axis_name)
+        live = total > 0
+        x = jnp.where(live, x, state.x)
+        m = jnp.where(live, m, state.m)
+        v = jnp.where(live, v, state.v)
+        update = jnp.where(live, update, jnp.zeros_like(update))
+
+    word = word_bits(state.x)
+    bits = payload_bits_array(exact_payload_bits(2 * d, word))
+    if mask is not None:
+        bits = masked_bits_metric(bits, mask, axis_name)
+
+    new_state = FAGHState(x=x, m=m, v=v, step=state.step + 1)
+    metrics = FAGHMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=bits,
+        direction_norm=jnp.linalg.norm(update),
+    )
+    return new_state, metrics
+
+
+def solver(cfg: FAGHConfig):
+    """This algorithm as a ``repro.core.engine.FederatedSolver``."""
+    from repro.core import engine
+
+    return engine.FederatedSolver(
+        name="fagh",
+        init=lambda obj, data, key, x0=None: init(obj, data, cfg, key, x0),
+        step=lambda state, obj, data, **axis_kw: step(
+            state, obj, data, cfg, **axis_kw
+        ),
+        client_fields=(),
+    )
+
+
+def ledger(cfg: FAGHConfig):
+    """Exact per-message bit accounting (see module docstring)."""
+    from repro.core import engine
+
+    del cfg  # accounting is config-independent: g_i + u_i up, x + mhat down
+    two_vec = lambda d, word, round_index: exact_payload_bits(2 * d, word)
+    return engine.SolverLedger(uplink=two_vec, downlink=two_vec)

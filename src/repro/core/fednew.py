@@ -264,17 +264,10 @@ def _mask_rows(mask, new, old):
     return jnp.where(m > 0, new, old)
 
 
-def _client_keys(sub, n_local: int, axis_name, n_global_clients):
-    """Per-client PRNG keys for the codec, identical across schedules: split
-    for ALL clients and slice this shard's rows, so the client-axis layout
-    never changes the randomness."""
-    if axis_name is None:
-        return jax.random.split(sub, n_local)
-    if n_global_clients is None:
-        raise ValueError("sharded codec encoding needs static n_global_clients")
-    keys = jax.random.split(sub, n_global_clients)
-    start = jax.lax.axis_index(axis_name) * n_local
-    return jax.lax.dynamic_slice_in_dim(keys, start, n_local)
+# Per-client codec PRNG keys (device-count invariant); now shared across
+# solvers as ``repro.comm.client_keys`` — this alias keeps the historical
+# import site.
+_client_keys = comm.client_keys
 
 
 def step(
@@ -408,6 +401,24 @@ def solver(cfg: FedNewConfig):
         init=lambda obj, data, key, x0=None: init(obj, data, cfg, key, x0),
         step=lambda state, obj, data, **axis_kw: step(state, obj, data, cfg, **axis_kw),
         client_fields=("lam", "curv", "comm"),
+    )
+
+
+def ledger(cfg: FedNewConfig):
+    """Exact bit accounting: the codec's uplink payload (``word*d`` for the
+    identity codec — plain FedNew; ``bits*d + 32`` for Q-FedNew; the exact
+    ``payload_bits`` in general), and the ``word*d`` broadcast iterate down.
+    FedNew never transmits curvature, so Hessian-refresh rounds cost no
+    extra bits in either direction."""
+    from repro.core import engine
+    from repro.core.quantization import exact_payload_bits
+
+    codec = cfg.build_codec()
+    return engine.SolverLedger(
+        uplink=lambda d, word, round_index: codec.payload_bits(
+            d, word, round_index
+        ),
+        downlink=lambda d, word, round_index: exact_payload_bits(d, word),
     )
 
 

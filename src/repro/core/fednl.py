@@ -1,0 +1,270 @@
+"""FedNL (Safaryan et al., 2021, https://arxiv.org/pdf/2106.02969): Newton
+Learn — per-client Hessian estimates maintained via *compressed* corrections.
+
+The method the paper's related work positions FedNew against: instead of
+never transmitting curvature (FedNew) or uploading it once (Newton-Zero),
+each client i maintains a Hessian estimate ``H_i^k`` that both the client
+and the PS hold, and each round uplinks a compressed correction toward the
+true local Hessian:
+
+    D_i^k   = nabla^2 f_i(x^k) - H_i^k            (the correction target)
+    wire    = C(D_i^k)                            (compressed; repro.comm)
+    H_i^k+1 = H_i^k + alpha * decode(wire)        (both ends, bit-identical)
+    x^k+1   = x^k - lr * [mean_i H_i^k+1]_damping^{-1} g^k
+
+where ``[A]_damping`` is FedNL's projection of the learned estimate onto
+``{A >= damping I}`` (eigenvalue floor) — compression can leave the
+estimate indefinite, and an additive ridge diverges where the floor stays
+stable (measured: topk corrections at fraction 0.05 need it).
+
+The compressor ``C`` is any registered ``repro.comm`` codec applied to the
+flattened ``(d*d,)`` correction — ``topk`` recovers FedNL's rank/top-K
+matrix compressors in spirit (top-K matrix entries), ``identity`` makes the
+estimate exact after one round (Newton with damping), ``stoch_quant``
+quantizes the correction stream. The codec's per-client state (previous
+quantized correction, EF residual) rides the scan/shard_map carry exactly
+like FedNew's ``comm`` field.
+
+Participation semantics mirror a real fleet: only sampled clients compute a
+correction and advance ``H_i``/codec state (``_mask_rows``); the PS-side
+mean-of-estimates is over ALL clients — stale estimates included, because
+the PS still *holds* an offline client's last estimate. The gradient mean
+is masked (only sampled clients transmit this round). An all-empty round is
+a frozen no-op: g aggregates to 0, so the projected solve returns 0, and
+every per-client row keeps its stale value.
+
+Communication accounting (exact Python ints, the repo-wide contract):
+
+    uplink    codec.payload_bits(d*d, word) + word*d  (correction + gradient)
+              + word*d^2 once at round 0 when ``init_hessian="exact"``
+              (the client uploads nabla^2 f_i(x^0) to seed both ends'
+              estimate — FedNL's H_i^0 initialization, same convention as
+              Newton-Zero's first-round charge)
+    downlink  word*d (the broadcast iterate; corrections are reconstructed
+              PS-side from the client wire, nothing else goes down)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import comm
+from repro.core import admm
+from repro.core.fednew import _mask_rows
+from repro.core.objectives import ClientDataset, Objective
+from repro.core.quantization import (
+    exact_payload_bits,
+    payload_bits_array,
+    word_bits,
+)
+
+INIT_HESSIANS = ("exact", "zero")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedNLConfig:
+    alpha: float = 1.0  # Hessian-learning rate on the decoded correction
+    damping: float = 1e-3  # eigenvalue floor of the PS solve (FedNL's projection)
+    lr: float = 1.0  # outer step size on the Newton direction
+    init_hessian: str = "exact"  # "exact" (H_i^0 = local Hessian) | "zero"
+    codec: Union[None, str, Mapping[str, Any]] = None  # correction compressor
+    backend: str = "auto"  # codec backend (stoch_quant kernel routing)
+
+    def __post_init__(self):
+        if not (0.0 < self.alpha <= 1.0):
+            raise ValueError(
+                f"fednl alpha must be in (0, 1], got {self.alpha}"
+            )
+        if self.damping <= 0:
+            raise ValueError(
+                f"fednl damping must be positive (it floors the learned "
+                f"Hessian's spectrum, which compression can make "
+                f"indefinite), got {self.damping}"
+            )
+        if self.lr <= 0:
+            raise ValueError(f"fednl lr must be positive, got {self.lr}")
+        if self.init_hessian not in INIT_HESSIANS:
+            raise ValueError(
+                f"unknown init_hessian {self.init_hessian!r}; "
+                f"expected one of {INIT_HESSIANS}"
+            )
+        if self.codec is not None:
+            object.__setattr__(self, "codec", comm.normalize_spec(self.codec))
+        self.build_codec()  # bad codec specs fail at config construction
+
+    @property
+    def codec_spec(self) -> Mapping[str, Any]:
+        if self.codec is not None:
+            return dict(self.codec)
+        return {"name": "identity"}
+
+    def build_codec(self) -> comm.Codec:
+        return comm.build_codec(self.codec_spec, backend=self.backend)
+
+
+class FedNLState(NamedTuple):
+    x: jax.Array  # (d,) global model
+    hest: jax.Array  # (n, d, d) per-client learned Hessian estimates
+    comm: jax.Array  # (n, w(d*d)) codec state over the correction stream
+    key: jax.Array
+    step: jax.Array
+
+
+class FedNLMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    uplink_bits_per_client: jax.Array
+    hessian_residual: jax.Array  # ||mean_i nabla^2 f_i(x) - mean_i H_i||_F
+
+
+def init(
+    obj: Objective, data: ClientDataset, cfg: FedNLConfig, key: jax.Array,
+    x0=None,
+) -> FedNLState:
+    d = data.dim
+    n = data.n_clients
+    dtype = (
+        data.features.dtype
+        if data.features.dtype in (jnp.float32, jnp.float64)
+        else jnp.float32
+    )
+    x = jnp.zeros((d,), dtype) if x0 is None else jnp.asarray(x0, dtype)
+    if cfg.init_hessian == "exact":
+        hest = obj.local_hessian(x, data).astype(dtype)
+    else:
+        hest = jnp.zeros((n, d, d), dtype)
+    return FedNLState(
+        x=x,
+        hest=hest,
+        comm=cfg.build_codec().init_state(n, d * d, dtype),
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def step(
+    state: FedNLState,
+    obj: Objective,
+    data: ClientDataset,
+    cfg: FedNLConfig,
+    *,
+    axis_name: Optional[str] = None,
+    n_global_clients: Optional[int] = None,
+    mask: Optional[jax.Array] = None,
+):
+    """One FedNL round (see module docstring for the update rule).
+
+    ``axis_name``/``n_global_clients``/``mask`` follow the engine contract
+    exactly as ``fednew.step`` does: per-client rows (hest, comm) are this
+    shard's clients, aggregation is collective over the client mesh axis,
+    sampled clients are selected by the mask, and the stochastic-codec keys
+    are split for all clients then sliced (device-count invariant).
+    """
+    if axis_name is not None:
+        obj = obj.with_axis(axis_name)
+    n_local = state.hest.shape[0]
+    d = data.dim
+
+    # -- client side: correction toward the true local Hessian --------------
+    H_true = obj.local_hessian(state.x, data)  # (n, d, d)
+    corr = (H_true - state.hest).reshape(n_local, d * d)
+
+    codec = cfg.build_codec()
+    if codec.needs_rng:
+        key, sub = jax.random.split(state.key)
+        keys = comm.client_keys(sub, n_local, axis_name, n_global_clients)
+    else:
+        key, keys = state.key, None
+    wire = codec.encode(keys, corr, state.comm, state.step)
+    corr_tx = codec.decode(wire, state.comm, state.step)
+    comm_state = codec.update_state(corr_tx, corr, state.comm, state.step)
+
+    hest = state.hest + cfg.alpha * corr_tx.reshape(n_local, d, d)
+    if mask is not None:
+        # Offline clients sent nothing: estimate and codec state stay stale.
+        hest = _mask_rows(mask, hest, state.hest)
+        comm_state = _mask_rows(mask, comm_state, state.comm)
+
+    # -- PS side: mean of ALL estimates (the PS holds stale ones too) -------
+    Hbar = admm.tree_mean_clients(hest, axis_name)
+    Hbar = 0.5 * (Hbar + Hbar.T)  # compression can break exact symmetry
+    g = obj.global_grad(state.x, data, weights=mask)
+    # FedNL's projection step: compressed corrections can leave the learned
+    # estimate indefinite, so the PS solves against the eigenvalue-floored
+    # [Hbar]_damping = U max(L, damping) U^T (projection onto {A >= damping
+    # I}) rather than an additive ridge — an additive ridge leaves
+    # near-null/negative directions with ~1/damping gain and diverges under
+    # aggressive compression. With an exact estimate (identity codec) the
+    # floor is inactive for damping below the spectrum and this IS damped
+    # Newton.
+    evals, evecs = jnp.linalg.eigh(Hbar)
+    evals = jnp.maximum(evals, jnp.asarray(cfg.damping, Hbar.dtype))
+    direction = evecs @ ((evecs.T @ g) / evals)
+    x = state.x - cfg.lr * direction
+
+    # -- exact uplink accounting (mirrors ledger(cfg)) ----------------------
+    word = word_bits(corr_tx)
+    bits = codec.payload_bits_metric(d * d, word, state.step)
+    bits = bits + payload_bits_array(exact_payload_bits(d, word))
+    if cfg.init_hessian == "exact":
+        init_bits = payload_bits_array(exact_payload_bits(d * d, word))
+        bits = bits + jnp.where(
+            state.step == 0, init_bits, jnp.zeros_like(init_bits)
+        )
+    if mask is not None:
+        from repro.core import participation
+
+        bits = participation.masked_bits_metric(bits, mask, axis_name)
+
+    new_state = FedNLState(
+        x=x, hest=hest, comm=comm_state, key=key, step=state.step + 1
+    )
+    metrics = FedNLMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=jnp.linalg.norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=bits,
+        hessian_residual=jnp.linalg.norm(
+            admm.tree_mean_clients(H_true, axis_name) - Hbar
+        ),
+    )
+    return new_state, metrics
+
+
+def solver(cfg: FedNLConfig):
+    """This algorithm as a ``repro.core.engine.FederatedSolver``."""
+    from repro.core import engine
+
+    codec_name = cfg.codec_spec["name"]
+    name = "fednl" if codec_name == "identity" else f"fednl+{codec_name}"
+    return engine.FederatedSolver(
+        name=name,
+        init=lambda obj, data, key, x0=None: init(obj, data, cfg, key, x0),
+        step=lambda state, obj, data, **axis_kw: step(
+            state, obj, data, cfg, **axis_kw
+        ),
+        client_fields=("hest", "comm"),
+    )
+
+
+def ledger(cfg: FedNLConfig):
+    """Exact per-message bit accounting (see module docstring)."""
+    from repro.core import engine
+
+    codec = cfg.build_codec()
+
+    def uplink(d: int, word: int, round_index: int) -> int:
+        bits = codec.payload_bits(d * d, word, round_index)
+        bits += exact_payload_bits(d, word)
+        if cfg.init_hessian == "exact" and round_index == 0:
+            bits += exact_payload_bits(d * d, word)
+        return bits
+
+    def downlink(d: int, word: int, round_index: int) -> int:
+        del round_index
+        return exact_payload_bits(d, word)
+
+    return engine.SolverLedger(uplink=uplink, downlink=downlink)

@@ -1,0 +1,180 @@
+"""Registry-wide solver-conformance battery (library; see
+test_solver_conformance.py for the parametrized suite).
+
+Every solver registered in ``engine.solver_names()`` must hold the same
+engine contracts, whatever its math:
+
+  * scan-vs-host equivalence — ``mode="scan"`` blocks reproduce the legacy
+    one-jitted-step-per-round loop. Bit-exact for every solver whose step
+    compiles to the same program both ways (measured: all but the
+    fednew family, whose ``lax.cond`` Hessian-refresh + Cholesky step picks
+    up float-eps association differences under the scan compilation —
+    those cases pin a tight tolerance instead and say so via
+    ``host_exact=False``).
+  * shard_map-vs-scan equivalence — the sharded schedule changes the
+    device layout, not the math (tight allclose; collectives reassociate
+    float sums, and a stochastic codec's discrete levels can flip on
+    eps-different inputs).
+  * forced-empty-round freeze — a round that samples nobody is a frozen
+    no-op: every carried state leaf is bit-identical before/after the
+    empty round (exempting the clocks: ``step``, and ``key`` for solvers
+    that draw per-round randomness), metrics stay finite, and the round
+    charges exactly 0 bits.
+  * fraction=1.0 short-circuit — full participation is the original code
+    path, bit for bit.
+  * ledger exactness — ``engine.solver_ledger`` returns Python ints whose
+    float lowering equals the traced per-round uplink metric exactly under
+    full participation, and a positive downlink.
+
+New solvers inherit the whole battery by adding one :class:`Case` to
+``CASES`` — the coverage test fails until every registry name is listed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import engine, objectives, participation as pl
+from repro.data import synthetic
+
+# Small enough to keep ~10 cases x 5 legs fast, sized so the 8-way CI host
+# mesh divides the client axis (8 % {1,2,4,8} == 0).
+N_CLIENTS = 8
+SAMPLES = 16
+DIM = 24
+ROUNDS = 6
+
+# State fields allowed to move across an all-empty round: the clocks
+# ("step"; "key" for solvers that draw per-round randomness regardless of
+# who participates), plus fednew's "y" — the round's AGGREGATED direction,
+# which an empty round collapses to 0 by design (that zero is exactly what
+# freezes x = x - y and shows up as direction_norm == 0). Everything else —
+# the iterate and all carried per-client state — must be bit-identical.
+FREEZE_EXEMPT = ("step", "key", "y")
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One conformance configuration: a registry solver + hparams.
+
+    ``host_exact`` declares whether scan-vs-host holds bit for bit for this
+    configuration (measured property of the compiled step, see module
+    docstring); non-exact cases compare at ``rtol``.
+    """
+
+    label: str
+    solver: str
+    hparams: Mapping = dataclasses.field(default_factory=dict)
+    host_exact: bool = True
+    rtol: float = 1e-4
+
+    def build(self) -> engine.FederatedSolver:
+        return engine.get_solver(self.solver, **dict(self.hparams))
+
+
+FEDNEW_HP = {"rho": 0.1, "alpha": 0.03, "hessian_period": 1}
+
+CASES: Tuple[Case, ...] = (
+    Case("fednew", "fednew", FEDNEW_HP, host_exact=False, rtol=1e-4),
+    Case(
+        "fednew-matfree",
+        "fednew",
+        {**FEDNEW_HP, "hessian_repr": "matfree", "cg_iters": 24},
+        host_exact=False,
+        rtol=1e-4,
+    ),
+    Case(
+        "q-fednew",
+        "q-fednew",
+        {**FEDNEW_HP, "bits": 3},
+        host_exact=False,
+        rtol=1e-3,  # stochastic quantizer: eps-flipped levels, EF-corrected
+    ),
+    Case(
+        "fednew-topk",
+        "fednew",
+        {**FEDNEW_HP, "codec": {"name": "topk", "fraction": 0.25}},
+        host_exact=False,
+        rtol=1e-3,  # top-k ties can resolve differently on eps-different y
+    ),
+    Case("fednl", "fednl"),
+    Case(
+        "fednl-quant",
+        "fednl",
+        {"alpha": 0.5, "damping": 1e-2,
+         "codec": {"name": "stoch_quant", "bits": 4}},
+        rtol=1e-3,
+    ),
+    Case("fedns", "fedns", {"sketch_size": 8}),
+    Case("fagh", "fagh"),
+    Case("fedgd", "fedgd", {"lr": 2.0}),
+    Case("newton-zero", "newton-zero"),
+    Case("newton", "newton"),
+)
+
+
+def covered_solver_names() -> Tuple[str, ...]:
+    return tuple(sorted({c.solver for c in CASES}))
+
+
+@functools.lru_cache(maxsize=None)
+def problem():
+    """The shared conformance problem: tiny synthetic logreg, float32."""
+    ds = synthetic.DatasetSpec(
+        name="conformance", n_clients=N_CLIENTS, samples_per_client=SAMPLES,
+        dim=DIM, sparse=False,
+    )
+    data = synthetic.make_dataset(ds, jax.random.PRNGKey(0))
+    return objectives.logistic_regression(mu=1e-3), data
+
+
+def run_case(case: Case, rounds: int = ROUNDS, *, mode="scan", mesh=None,
+             participation=None, block_size=3):
+    obj, data = problem()
+    return engine.run(
+        case.build(), obj, data, rounds,
+        key=jax.random.PRNGKey(1), mode=mode, mesh=mesh,
+        block_size=block_size, participation=participation,
+    )
+
+
+def run_case_sharded(case: Case, rounds: int = ROUNDS, *,
+                     participation=None, block_size=3):
+    obj, data = problem()
+    return engine.run_sharded_on_host(
+        case.build(), obj, data, rounds,
+        key=jax.random.PRNGKey(1), block_size=block_size,
+        participation=participation,
+    )
+
+
+def assert_tree_equal(a, b, *, err=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=err)
+
+
+def assert_tree_close(a, b, *, rtol, atol=1e-6, err=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), rtol=rtol, atol=atol, err_msg=err
+        )
+
+
+def empty_round_participation(
+    rounds: int = ROUNDS, n: int = N_CLIENTS
+) -> Tuple[pl.Participation, int]:
+    """A Bernoulli participation law whose replayed mask schedule contains
+    an all-empty round after round 0, plus that round's index."""
+    for seed in range(50):
+        part = pl.Participation(fraction=0.05, kind="bernoulli", seed=seed)
+        masks = pl.round_masks(part, rounds, n)
+        for r in range(1, rounds):
+            if masks[r].sum() == 0:
+                return part, r
+    raise AssertionError("no empty round in 50 seeds?!")

@@ -291,19 +291,18 @@ def test_topk_codec_converges_through_engine(problem):
     assert float(m.uplink_bits_per_client[0]) == 10 * (32 + 7)
 
 
-def test_codec_state_rides_shard_map_carry(problem):
+def test_codec_state_rides_shard_map_carry():
     """topk's error-feedback state is per-client state in the sharded
-    engine too: scan and shard_map trajectories agree to float tolerance."""
-    obj, data = problem
-    sol = engine.get_solver(
-        "fednew", rho=0.02, alpha=0.03, hessian_period=1,
-        codec={"name": "topk", "fraction": 0.1},
-    )
-    _, m1 = engine.run(sol, obj, data, 8, key=jax.random.PRNGKey(0))
-    _, m2 = engine.run(sol, obj, data, 8, key=jax.random.PRNGKey(0),
-                       mesh=make_client_mesh(1))
-    np.testing.assert_allclose(np.asarray(m1.loss), np.asarray(m2.loss),
-                               rtol=1e-5, atol=1e-7)
+    engine too: scan and shard_map trajectories agree to float tolerance.
+    Delegates to the registry-wide conformance battery (the same leg runs
+    for every solver in tests/test_solver_conformance.py)."""
+    import conformance as conf
+
+    case = next(c for c in conf.CASES if c.label == "fednew-topk")
+    state_s, metrics_s = conf.run_case(case, rounds=8)
+    state_m, metrics_m = conf.run_case_sharded(case, rounds=8)
+    conf.assert_tree_close(state_s, state_m, rtol=case.rtol)
+    conf.assert_tree_close(metrics_s, metrics_m, rtol=case.rtol)
 
 
 def test_bit_schedule_through_engine_matches_ledger(problem):

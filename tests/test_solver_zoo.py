@@ -1,0 +1,197 @@
+"""Second-order solver zoo: per-solver unit tests + convergence pins.
+
+The conformance battery (test_solver_conformance.py) proves every solver
+holds the engine contracts; this file pins the things that make each zoo
+member ITSELF correct: config validation with errors that name the bad
+knob, the fednl init_hessian round-0 accounting, the fagh HVP-oracle
+requirement at both the engine and the api layer, codec-suffixed registry
+names, and tolerance-banded convergence on the paper's a1a-shaped
+synthetic logreg problem within a fixed round budget (relative gap
+(f(x_K) - f*) / (f(x_0) - f*) against the 30-iterate Newton reference).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import baselines, engine, fagh, fednl, fedns, objectives
+from repro.data import synthetic
+
+# ---------------------------------------------------------------------------
+# config validation: every bad knob is rejected by name
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    {"alpha": 0.0}, {"alpha": 1.5}, {"damping": 0.0}, {"damping": -1.0},
+    {"lr": 0.0}, {"init_hessian": "identity"},
+    {"codec": {"name": "gzip"}},
+])
+def test_fednl_config_rejects(bad):
+    with pytest.raises((ValueError, TypeError)):
+        fednl.FedNLConfig(**bad)
+
+
+@pytest.mark.parametrize("bad", [
+    {"sketch_size": 0}, {"sketch_size": True}, {"sketch_size": 2.0},
+    {"damping": 0.0}, {"jitter": 0.0}, {"lr": -1.0},
+])
+def test_fedns_config_rejects(bad):
+    with pytest.raises((ValueError, TypeError)):
+        fedns.FedNSConfig(**bad)
+
+
+@pytest.mark.parametrize("bad", [
+    {"lr": 0.0}, {"beta": 1.0}, {"beta": -0.1}, {"beta2": 1.0},
+    {"damping": 0.0},
+])
+def test_fagh_config_rejects(bad):
+    with pytest.raises(ValueError):
+        fagh.FAGHConfig(**bad)
+
+
+def test_zoo_registered_with_codec_suffixed_names():
+    names = engine.solver_names()
+    for name in ("fednl", "fedns", "fagh"):
+        assert name in names
+    assert engine.get_solver("fednl").name == "fednl"
+    assert engine.get_solver(
+        "fednl", codec={"name": "topk", "fraction": 0.1}
+    ).name == "fednl+topk"
+    assert engine.get_solver(
+        "fednl", codec={"name": "stoch_quant", "bits": 4}
+    ).name == "fednl+stoch_quant"
+    with pytest.raises(ValueError, match="fednl"):
+        engine.get_solver("fednl", alpha=2.0)
+    with pytest.raises(TypeError, match="unknown hparam"):
+        engine.get_solver("fedns", bits=3)  # not a fedns knob
+
+
+def test_fednl_zero_init_drops_round0_hessian_upload():
+    """init_hessian='zero' starts from H_i^0 = 0 with nothing on the wire at
+    round 0; 'exact' ships the full d*d Hessian once. The ledger and the
+    traced metric both carry the difference."""
+    d, word = 7, 32
+    exact = engine.solver_ledger("fednl")
+    zero = engine.solver_ledger("fednl", init_hessian="zero")
+    assert exact.uplink(d, word, 0) - zero.uplink(d, word, 0) == word * d * d
+    assert exact.uplink(d, word, 1) == zero.uplink(d, word, 1)
+
+
+def test_fagh_requires_hvp_oracle_engine_and_api():
+    obj, data = _a1a()
+    stripped = dataclasses.replace(obj, local_hvp=None)
+    sol = engine.get_solver("fagh")
+    with pytest.raises(ValueError, match="local_hvp"):
+        sol.init(stripped, data, jax.random.PRNGKey(0))
+    # api layer: the cross-section check names the solver and the oracle
+    spec = _a1a_spec(solver=api.SolverSpec("fagh", {}))
+    with pytest.raises(ValueError, match="local_hvp"):
+        api.build.check_solver_objective(spec, stripped)
+
+
+def test_compression_spec_composes_with_fednl_only_for_codec_carriers():
+    spec = _a1a_spec(
+        solver=api.SolverSpec("fednl", {"alpha": 0.5, "damping": 1e-2}),
+        compression=api.CompressionSpec(codec="topk",
+                                        params={"fraction": 0.25}),
+        schedule=api.ScheduleSpec(rounds=3, block_size=3),
+    )
+    res = api.run(spec)
+    assert res.solver == "fednl+topk"
+    d = res.dim
+    k = max(1, int(np.ceil(0.25 * d * d)))  # codec compresses the d*d wire
+    idx = max(1, (d * d - 1).bit_length())
+    per_client = k * (32 + idx) + 32 * d  # correction + exact gradient
+    assert res.uplink_bits_total[1] == per_client * res.n_clients
+    for name in ("fedns", "fagh"):
+        with pytest.raises(ValueError, match="codec-carrying"):
+            _a1a_spec(solver=api.SolverSpec(name, {}),
+                      compression=api.CompressionSpec(codec="identity"))
+
+
+# ---------------------------------------------------------------------------
+# convergence pins: a1a-shaped synthetic logreg, fixed round budget
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _a1a():
+    data = synthetic.make_dataset(
+        synthetic.PAPER_DATASETS["a1a"], jax.random.PRNGKey(0)
+    )
+    return objectives.logistic_regression(mu=1e-3), data
+
+
+def _a1a_spec(**overrides) -> api.ExperimentSpec:
+    kw = dict(
+        objective=api.ObjectiveSpec(kind="logreg", mu=1e-3),
+        partition=api.PartitionSpec(dataset="a1a", seed=0),
+        solver=api.SolverSpec("fednl", {}),
+        schedule=api.ScheduleSpec(rounds=3, block_size=3),
+    )
+    kw.update(overrides)
+    return api.ExperimentSpec(**kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _f_star():
+    obj, data = _a1a()
+    _, fs = baselines.reference_optimum(obj, data, iters=30)
+    f0 = obj.global_loss(jax.numpy.zeros((data.dim,)), data)
+    return float(fs), float(f0)
+
+
+def _relgap(solver_name, hparams, rounds):
+    obj, data = _a1a()
+    sol = engine.get_solver(solver_name, **hparams)
+    _, metrics = engine.run(sol, obj, data, rounds,
+                            key=jax.random.PRNGKey(1), block_size=10)
+    f_star, f0 = _f_star()
+    return (float(np.asarray(metrics.loss)[-1]) - f_star) / (f0 - f_star)
+
+
+# Bands are ~5-50x above the values measured at these exact hparams/seeds,
+# so they absorb BLAS/codegen jitter while still failing on real
+# regressions (a diverging or stalled solver lands orders of magnitude
+# out).
+PINS = [
+    # (label, solver, hparams, rounds, relgap band)
+    ("fednl-exact", "fednl", {}, 15, 1e-6),  # == exact Newton w/ identity codec
+    ("fednl-topk", "fednl",
+     {"alpha": 0.5, "damping": 1e-2,
+      "codec": {"name": "topk", "fraction": 0.05}}, 40, 1e-4),
+    ("fednl-quant", "fednl",
+     {"alpha": 0.5, "damping": 1e-2,
+      "codec": {"name": "stoch_quant", "bits": 4}}, 40, 1e-4),
+    ("fedns", "fedns", {"sketch_size": 16}, 40, 5e-2),
+    ("fagh", "fagh", {}, 40, 1e-3),
+]
+
+
+@pytest.mark.parametrize("label,solver,hparams,rounds,band", PINS,
+                         ids=[p[0] for p in PINS])
+def test_convergence_pin(label, solver, hparams, rounds, band):
+    gap = _relgap(solver, hparams, rounds)
+    assert gap < band, (
+        f"{label}: relative gap {gap:.3e} above the {band:.0e} band after "
+        f"{rounds} rounds"
+    )
+    assert gap > -1e-3  # below the Newton reference would mean a bad f*
+
+
+def test_fednl_hessian_residual_contracts():
+    """The learned-Hessian Frobenius residual the fednl metric reports
+    contracts geometrically under the identity codec (alpha=1 copies the
+    true Hessian after one round)."""
+    obj, data = _a1a()
+    sol = engine.get_solver("fednl", init_hessian="zero")
+    _, metrics = engine.run(sol, obj, data, 6, key=jax.random.PRNGKey(1),
+                            block_size=3)
+    res = np.asarray(metrics.hessian_residual)
+    assert res[-1] <= res[0]
+    assert res[-1] < 1e-5  # identity codec: residual collapses immediately
