@@ -1,0 +1,108 @@
+"""LM fine-tuning workload benchmark: Newton-type solvers on a registry
+arch's param pytree, loss vs *exact* per-leaf uplink bits.
+
+Three legs through ``repro.api`` on a reduced ``xlstm-350m`` (the assigned
+350M family at container size): matrix-free FedNew, FedNew + 4-bit
+stochastic quantization (per-leaf wire: ``4·d + 32·n_leaves`` bits/client/
+round), and FAGH (``2d`` words each way). Every ledger entry is a Python
+int summed over param leaves — the artifact asserts the quantized leg's
+bits-per-round ratio matches the per-leaf formula exactly.
+
+    BENCH_ROUNDS=6 PYTHONPATH=src python -m benchmarks.run --only lm_workload
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from benchmarks.common import emit, save_json
+
+from repro import api
+
+
+ARCH = "xlstm-350m"
+
+
+def _spec(solver: str, hparams: dict, rounds: int, compression=None):
+    d = {
+        "name": f"lm-{solver}" + ("-q4" if compression else ""),
+        "objective": {"kind": "model", "arch": ARCH,
+                      "seq_len": 8, "layers": 1, "d_model": 16},
+        "partition": {"dataset": "tokens", "n_clients": 2,
+                      "samples_per_client": 2, "seed": 0},
+        "solver": {"name": solver, "hparams": hparams},
+        "schedule": {"rounds": rounds, "mode": "host"},
+        "seed": 1,
+    }
+    if compression:
+        d["compression"] = compression
+    return api.ExperimentSpec.from_dict(d)
+
+
+def main() -> None:
+    rounds = int(os.environ.get("BENCH_ROUNDS", "6"))
+    legs = [
+        ("fednew-matfree", _spec(
+            "fednew",
+            {"hessian_repr": "matfree", "cg_iters": 4,
+             "alpha": 80.0, "rho": 1.0},
+            rounds,
+        )),
+        ("fednew-matfree-q4", _spec(
+            "fednew",
+            {"hessian_repr": "matfree", "cg_iters": 4,
+             "alpha": 80.0, "rho": 1.0},
+            rounds,
+            compression={"codec": "stoch_quant", "params": {"bits": 4}},
+        )),
+        ("fagh", _spec("fagh", {"lr": 0.5, "damping": 1.0}, rounds)),
+    ]
+
+    runs = []
+    for label, spec in legs:
+        res = api.run(spec)
+        losses = res.metrics["loss"]
+        assert all(isinstance(b, int) for b in res.uplink_bits_total)
+        per_round = res.steady_wall_clock_s / max(res.steady_rounds, 1)
+        emit(f"lm_workload/{label}", per_round * 1e6,
+             f"loss={losses[0]:.3f}->{losses[-1]:.3f};"
+             f"bits/client/round={res.uplink_bits_total[0] // res.n_clients}")
+        runs.append({
+            "label": label,
+            "solver": res.solver,
+            "dim": res.dim,
+            "losses": losses,
+            "uplink_bits_total": res.uplink_bits_total,
+            "cumulative_uplink_bits_per_client":
+                res.cumulative_uplink_bits_per_client[-1],
+        })
+
+    # per-leaf accounting headline: the q4 wire must cost exactly
+    # 4·d + 32·n_leaves bits per client per round (one range word per leaf)
+    full, q4 = runs[0], runs[1]
+    x0 = api.build_x0(legs[1][1])
+    n_leaves = len(jax.tree.leaves(x0))
+    q4_bits = q4["uplink_bits_total"][0] // 2
+    assert q4_bits == 4 * q4["dim"] + 32 * n_leaves, (q4_bits, q4["dim"])
+    headline = {
+        "arch": ARCH,
+        "dim": full["dim"],
+        "n_leaves": n_leaves,
+        "full_bits_per_round": full["uplink_bits_total"][0] // 2,
+        "q4_bits_per_round": q4_bits,
+        "ratio": (full["uplink_bits_total"][0]) / q4["uplink_bits_total"][0],
+        "q4_loss_decreased": q4["losses"][-1] < q4["losses"][0],
+    }
+    assert headline["q4_loss_decreased"]
+
+    save_json("lm_workload", {
+        "config": {"arch": ARCH, "rounds": rounds, "n_clients": 2},
+        "runs": runs,
+        "headline": headline,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,90 +1,93 @@
-"""End-to-end driver: federated training of a ~100M-param transformer with
-FedNew-HF (the paper's Algorithm 1, matrix-free clients) for a few hundred
-rounds on the deterministic synthetic token pipeline.
+"""Federated LM fine-tuning as a first-class ``repro.api`` workload.
 
-The model is a scaled-down gemma3-family config (the same block system the
-full assigned architectures use) sized to fit a CPU container; on a TPU mesh
-the identical code runs the full configs via repro.launch.train.
+One spec drives everything: a ``kind='model'`` objective names a registry
+architecture (default: the assigned ``xlstm-350m``), the tokens partition
+shards the deterministic synthetic pipeline across clients, and the runner
+executes the paper's Algorithm 1 (matrix-free FedNew: damped CG on autodiff
+HVPs, eq. 9/13/12/14) and the FAGH baseline over the model's param pytree —
+with the same exact per-leaf uplink/downlink bit ledgers every flat-vector
+experiment gets.
 
-    PYTHONPATH=src python examples/fed_train_lm.py [--rounds 300]
+By default the arch runs at a ``reduced()`` size that fits the CPU
+container; ``--layers 0 --d-model 0`` runs the full registry config on real
+hardware. The CI-sized variant of this workload is
+``examples/specs/lm_tiny.json`` through ``python -m repro.api``.
+
+    PYTHONPATH=src python examples/fed_train_lm.py [--rounds 20]
 """
 
 import argparse
-import dataclasses
 
-import jax
-
-from repro.configs.base import FedConfig, InputShape, ModelConfig
-from repro.launch.mesh import make_host_mesh
-from repro.train.loop import train_fedgd, train_fednew
+from repro.api import ExperimentSpec, run
 
 
-PRESETS = {
-    # ~100M: the brief's end-to-end target — run this on real hardware.
-    "100m": dict(n_layers=8, d_model=768, n_heads=8, n_kv_heads=4, head_dim=96,
-                 d_ff=3072, vocab_size=32768, cg_iters=4),
-    # ~5M: same family/code path, sized so a few hundred rounds finish on the
-    # CPU container (what EXPERIMENTS.md §Paper actually executed).
-    "small": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
-                  d_ff=1024, vocab_size=4096, cg_iters=2),
-}
+def lm_spec(args, solver: str, hparams: dict) -> ExperimentSpec:
+    return ExperimentSpec.from_dict({
+        "objective": {
+            "kind": "model",
+            "arch": args.arch,
+            "seq_len": args.seq_len,
+            "layers": args.layers,
+            "d_model": args.d_model,
+        },
+        "partition": {
+            "dataset": "tokens",
+            "n_clients": args.clients,
+            "samples_per_client": args.samples,
+            "seed": 0,
+        },
+        "solver": {"name": solver, "hparams": hparams},
+        "schedule": {"rounds": args.rounds, "mode": "host"},
+        "seed": 1,
+    })
 
 
-def lm_config(preset: str) -> ModelConfig:
-    p = PRESETS[preset]
-    return ModelConfig(
-        name=f"fednew-lm-{preset}",
-        arch_type="dense",
-        n_layers=p["n_layers"],
-        d_model=p["d_model"],
-        n_heads=p["n_heads"],
-        n_kv_heads=p["n_kv_heads"],
-        head_dim=p["head_dim"],
-        d_ff=p["d_ff"],
-        vocab_size=p["vocab_size"],
-        layer_pattern=("local", "global"),
-        window=128,
-        rope_theta=10_000.0,
-        mlp_act="gelu",
-        param_dtype="float32",
-        activation_dtype="float32",
-        loss_chunk=128,
-        attn_q_chunk=64,
-        attn_kv_chunk=64,
-        remat=False,
-        source="examples/fed_train_lm.py (gemma3-family, scaled)",
-        fed=FedConfig(rho=0.05, alpha=0.2, cg_iters=p["cg_iters"],
-                      client_axes=("data",)),
-    )
+def report(label: str, res) -> None:
+    losses = res.metrics["loss"]
+    print(f"== {label} ==")
+    print(f"  params={res.dim/1e6:.2f}M  clients={res.n_clients}  "
+          f"rounds={res.rounds}")
+    print(f"  loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(f"  uplink/round/client = "
+          f"{res.uplink_bits_total[0] // res.n_clients} bits "
+          f"(exact per-leaf ledger; O(d), no Hessians)")
+    print(f"  cumulative uplink {res.cumulative_uplink_bits_total[-1]} bits, "
+          f"downlink {res.cumulative_downlink_bits_total[-1]} bits\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=200)
-    ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--global-batch", type=int, default=4)
-    ap.add_argument("--preset", choices=tuple(PRESETS), default="small")
-    ap.add_argument("--baseline", action="store_true",
-                    help="also run the FedGD (adamw) baseline for comparison")
+    ap.add_argument("--arch", default="xlstm-350m",
+                    help="registry architecture (repro.configs.registry)")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--samples", type=int, default=4,
+                    help="sequences per client per round")
+    ap.add_argument("--layers", type=int, default=1,
+                    help="reduced() layer count; 0 with --d-model 0 runs "
+                         "the full registry config")
+    ap.add_argument("--d-model", type=int, default=32,
+                    help="reduced() width; 0 with --layers 0 = full size")
+    ap.add_argument("--save", default="",
+                    help="write the FedNew RunResult JSON here")
     args = ap.parse_args()
 
-    cfg = lm_config(args.preset)
-    from repro.core.fednew_hf import param_count
-    from repro.models import lm
-    n_params = param_count(lm.init_params(cfg, jax.random.PRNGKey(0)))
-    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
-          f"uplink/round/client = {32 * n_params / 8e6:.1f} MB (O(d), no Hessians)\n")
+    # Raw-initialized LMs are indefinite at x^0 (negative curvature along
+    # the gradient), so the damped system (H_i + (alpha+rho) I) needs
+    # LM-scale damping — CG's positive-definiteness guard zeroes the step
+    # otherwise. Same reasoning sets FAGH's curvature-clip damping.
+    fednew_res = run(lm_spec(args, "fednew", {
+        "hessian_repr": "matfree", "cg_iters": 4,
+        "alpha": 80.0, "rho": 1.0,
+    }))
+    report("FedNew (matrix-free, paper Alg. 1)", fednew_res)
 
-    shape = InputShape("lm_train", args.seq_len, args.global_batch, "train")
-    mesh = make_host_mesh()
-    print("== FedNew-HF (paper Alg. 1, GN-HVP + one-pass ADMM) ==")
-    log = train_fednew(cfg, mesh, shape, args.rounds, log_every=10)
-    print(f"\nloss {log.losses[0]:.3f} -> {log.losses[-1]:.3f} over {args.rounds} rounds")
+    fagh_res = run(lm_spec(args, "fagh", {"lr": 0.5, "damping": 1.0}))
+    report("FAGH baseline", fagh_res)
 
-    if args.baseline:
-        print("\n== FedGD baseline (adamw) ==")
-        log_gd = train_fedgd(cfg, mesh, shape, args.rounds, lr=3e-4)
-        print(f"\nFedGD loss {log_gd.losses[0]:.3f} -> {log_gd.losses[-1]:.3f}")
+    if args.save:
+        print(f"saved: {fednew_res.save_json(args.save)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""Schema assertion for the LM smoke leg's RunResult artifact.
+
+CI runs ``examples/specs/lm_tiny.json`` (a tiny-transformer kind='model'
+spec) through ``python -m repro.api`` and pushes the saved JSON through
+this checker: the pytree workload's ledger typing (exact ints, summed per
+param leaf), metric/ledger agreement, and a decreasing loss cannot
+silently rot.
+
+    python scripts/check_lm_artifact.py benchmarks/out/lm_tiny_runresult.json
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+
+def check_payload(payload: dict) -> None:
+    """Raise AssertionError if the RunResult doesn't match the contract."""
+    spec = payload["spec"]
+    assert spec["objective"]["kind"] == "model", spec["objective"]
+    assert spec["partition"]["dataset"] == "tokens"
+    rounds = payload["rounds"]
+    assert rounds == spec["schedule"]["rounds"]
+
+    # dim is the total param count of the registry arch at the spec's
+    # reduced size — a pytree run must report it, not a dataset dim.
+    assert isinstance(payload["dim"], int) and payload["dim"] > 0
+
+    losses = payload["metrics"]["loss"]
+    assert len(losses) == rounds
+    assert all(math.isfinite(l) for l in losses), losses
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+
+    # Exact ledgers: Python ints end to end (never floats), per-leaf sums
+    # multiplied by the sampled-client counts, cumulative sums consistent.
+    for key in ("uplink_bits_total", "downlink_bits_total"):
+        vals = payload[key]
+        assert len(vals) == rounds
+        assert all(isinstance(v, int) for v in vals), (key, vals)
+    acc = 0
+    for v, c in zip(payload["uplink_bits_total"],
+                    payload["cumulative_uplink_bits_total"]):
+        acc += v
+        assert c == acc and isinstance(c, int)
+
+    # The traced in-step metric must agree with the ledger exactly.
+    per_client = payload["metrics"]["uplink_bits_per_client"]
+    n = payload["n_clients"]
+    for traced, total in zip(per_client, payload["uplink_bits_total"]):
+        assert traced == total / n, (traced, total, n)
+
+
+def main() -> None:
+    path = sys.argv[1]
+    with open(path) as f:
+        payload = json.load(f)
+    check_payload(payload)
+    print(f"ok: {path} (dim={payload['dim']}, "
+          f"loss {payload['metrics']['loss'][0]:.3f} -> "
+          f"{payload['metrics']['loss'][-1]:.3f})")
+
+
+if __name__ == "__main__":
+    main()

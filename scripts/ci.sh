@@ -29,6 +29,14 @@ mkdir -p benchmarks/out
 python -m repro.api examples/specs/quickstart.json \
     --out benchmarks/out/quickstart_runresult.json
 
+# LM-workload smoke leg: a tiny-transformer kind='model' spec (registry
+# arch at reduced size) through the CLI — matrix-free FedNew over a param
+# pytree with per-leaf exact ledgers. The artifact checker asserts the
+# RunResult schema: int ledgers, ledger/metric agreement, decreasing loss.
+python -m repro.api examples/specs/lm_tiny.json \
+    --out benchmarks/out/lm_tiny_runresult.json
+python scripts/check_lm_artifact.py benchmarks/out/lm_tiny_runresult.json
+
 # x64 leg: the int64 bits_metric_dtype branch of the exact uplink ledger is
 # dead code under default-f32 CI. Re-run the quantization/ledger suites with
 # x64 enabled, then push one float64 spec through the CLI (which flips x64

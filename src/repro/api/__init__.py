@@ -25,11 +25,13 @@ See docs/api.md for the full schema and a scenario cookbook.
 from repro.api.build import (
     build_dataset,
     build_mesh,
+    build_model_config,
     build_objective,
     build_participation,
     build_problem,
     build_run_codec,
     build_solver,
+    build_x0,
 )
 from repro.api.runner import RunResult, run, run_components
 from repro.api.specs import (
@@ -61,7 +63,9 @@ __all__ = [
     "run_components",
     "build_objective",
     "build_dataset",
+    "build_model_config",
     "build_problem",
+    "build_x0",
     "build_solver",
     "build_run_codec",
     "build_mesh",

@@ -37,9 +37,35 @@ def _dtype(name: str):
     return dt
 
 
+def build_model_config(spec: ObjectiveSpec):
+    """The registry ``ModelConfig`` a kind='model' objective resolves to:
+    the arch at full size, or its declarative ``reduced()`` variant when the
+    spec sets ``layers``/``d_model`` (unset fields take reduced()'s
+    defaults). Deterministic — dataset, oracles, and x0 all derive from this
+    one config."""
+    from repro.configs import registry
+
+    cfg = registry.get_config(spec.arch)
+    if spec.layers or spec.d_model:
+        kw = {}
+        if spec.layers:
+            kw["n_layers"] = spec.layers
+        if spec.d_model:
+            kw["d_model"] = spec.d_model
+        cfg = cfg.reduced(**kw)
+    return cfg
+
+
 def build_objective(spec: ObjectiveSpec) -> objectives.Objective:
     if spec.kind == "quadratic":
         return objectives.quadratic()
+    if spec.kind == "model":
+        from repro.models import lm
+
+        cfg = build_model_config(spec)
+        return objectives.from_loss_fn(
+            lambda params, batch: lm.train_loss(params, cfg, batch)
+        )
     return objectives.logistic_regression(mu=spec.mu)
 
 
@@ -53,6 +79,21 @@ def build_dataset(
         return synthetic.make_quadratic_dataset(
             key, n_clients=n, dim=d, cond=pspec.cond, dtype=dtype
         )
+    if ospec.kind == "model":
+        from repro.configs.base import InputShape
+        from repro.data import tokens
+
+        cfg = build_model_config(ospec)
+        shape = InputShape(
+            name="fed_tokens",
+            seq_len=ospec.seq_len,
+            global_batch=n * m,
+            kind="train",
+        )
+        batch = tokens.client_batches(
+            cfg, shape, n_clients=n, seed=pspec.seed, step=0
+        )
+        return objectives.TokenDataset(batch=batch)
     if pspec.dataset == "custom":
         ds = synthetic.DatasetSpec(
             name="custom", n_clients=n, samples_per_client=m, dim=d,
@@ -78,6 +119,19 @@ def build_problem(
     return build_objective(spec.objective), build_dataset(
         spec.objective, spec.partition
     )
+
+
+def build_x0(spec: ExperimentSpec):
+    """Initial iterate for the run: a registry-initialised param pytree for
+    kind='model' objectives (seeded by ``partition.seed`` so the dataset and
+    the init derive from the one spec seed), ``None`` otherwise (flat-vector
+    kinds let the solver build its own zero iterate)."""
+    if spec.objective.kind != "model":
+        return None
+    from repro.models import lm
+
+    cfg = build_model_config(spec.objective)
+    return lm.init_params(cfg, jax.random.PRNGKey(spec.partition.seed))
 
 
 def _merged_solver_hparams(spec: SolverSpec, compression) -> dict:
@@ -117,25 +171,55 @@ def build_run_codec(spec: ExperimentSpec):
     return None
 
 
+def _objective_desc(spec: ExperimentSpec) -> str:
+    """How capability errors name the objective: the spec field that chose
+    it, plus the registry arch for model kinds so the error points at the
+    exact config line to change."""
+    if spec.objective.kind == "model":
+        return (
+            f"objective.kind='model' (registry arch "
+            f"{spec.objective.arch!r})"
+        )
+    return f"objective.kind={spec.objective.kind!r}"
+
+
 def check_solver_objective(spec: ExperimentSpec, obj: objectives.Objective):
     """Cross-section validation the frozen specs can't do alone: the
-    matrix-free paths need an objective that ships a ``local_hvp`` oracle
-    (both built-in kinds do; this guards future objective kinds and
-    hand-built ``run_components`` objectives routed through specs)."""
+    matrix-free paths need an objective that ships a ``local_hvp`` oracle,
+    and pytree (model) objectives only run on solvers with a pytree state
+    layout. Errors name the spec field (and registry arch) that caused the
+    mismatch so they can be fixed in the JSON directly."""
+    desc = _objective_desc(spec)
     if (
         spec.solver.hparams.get("hessian_repr") == "matfree"
         and not obj.has_hvp
     ):
         raise ValueError(
-            f"solver hparams ask for hessian_repr='matfree' but the "
-            f"{spec.objective.kind!r} objective provides no local_hvp oracle"
+            f"solver.hparams['hessian_repr']='matfree' but the {desc} "
+            f"objective provides no local_hvp oracle"
         )
     if spec.solver.name == "fagh" and not obj.has_hvp:
         raise ValueError(
-            f"solver 'fagh' spends one local_hvp per client per round but "
-            f"the {spec.objective.kind!r} objective provides no local_hvp "
-            f"oracle"
+            f"solver.name='fagh' spends one local_hvp per client per round "
+            f"but the {desc} objective provides no local_hvp oracle"
         )
+    if spec.objective.kind == "model":
+        if spec.solver.name not in ("fednew", "fagh"):
+            raise ValueError(
+                f"solver.name={spec.solver.name!r} has no pytree state "
+                f"layout; {desc} runs on solver.name='fednew' (with "
+                f"hessian_repr='matfree') or 'fagh'"
+            )
+        if (
+            spec.solver.name == "fednew"
+            and spec.solver.hparams.get("hessian_repr") != "matfree"
+        ):
+            raise ValueError(
+                f"{desc} parameters are a pytree; fednew needs "
+                f"solver.hparams['hessian_repr']='matfree' (the dense "
+                f"branch materializes (d, d) Hessian blocks, which autodiff "
+                f"model objectives never form)"
+            )
 
 
 def build_mesh(spec: ScheduleSpec, n_clients: int):

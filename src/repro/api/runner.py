@@ -141,23 +141,30 @@ def _run_ledger(spec: ExperimentSpec) -> engine.SolverLedger:
 
 
 def _per_round_payload_bits(
-    spec: ExperimentSpec, d: int, word: int, rounds: int
+    spec: ExperimentSpec, leaf_words, rounds: int
 ) -> List[int]:
     """Exact bits ONE sampled client uploads in each round, as Python ints
     (mirrors each step's metric expression; pinned against the traced
-    metric in tests/test_api.py and the conformance suite)."""
+    metric in tests/test_api.py and the conformance suite). ``leaf_words``
+    is the wire layout: ``[(size, word_bits), ...]`` — one entry for a flat
+    d-vector run, one per param leaf for a pytree run (codecs apply
+    per-leaf, so per-round bits are the sum of per-leaf payloads)."""
     uplink = _run_ledger(spec).uplink
-    return [uplink(d, word, r) for r in range(rounds)]
+    return [
+        sum(uplink(s, w, r) for s, w in leaf_words) for r in range(rounds)
+    ]
 
 
 def _per_round_downlink_bits(
-    spec: ExperimentSpec, d: int, word: int, rounds: int
+    spec: ExperimentSpec, leaf_words, rounds: int
 ) -> List[int]:
     """Exact bits the PS sends ONE sampled client per round — per-solver
-    (most broadcast the d-vector iterate; fagh also downlinks the momentum
-    direction its phase-2 HVP probes)."""
+    (most broadcast the iterate; fagh also downlinks the momentum
+    direction its phase-2 HVP probes), summed over the wire leaves."""
     downlink = _run_ledger(spec).downlink
-    return [downlink(d, word, r) for r in range(rounds)]
+    return [
+        sum(downlink(s, w, r) for s, w in leaf_words) for r in range(rounds)
+    ]
 
 
 def _transmitted_word_bits(data) -> int:
@@ -170,6 +177,17 @@ def _transmitted_word_bits(data) -> int:
     return word_bits(dt)
 
 
+def _wire_layout(data, x0):
+    """``(dim, leaf_words)`` of the transmitted state: per-leaf
+    ``(size, word_bits)`` pairs for a pytree run (dim = total param count),
+    the single ``(d, word)`` entry for flat-vector runs."""
+    if x0 is not None:
+        leaves = jax.tree_util.tree_leaves(x0)
+        leaf_words = [(int(l.size), word_bits(l.dtype)) for l in leaves]
+        return sum(s for s, _ in leaf_words), leaf_words
+    return data.dim, [(data.dim, _transmitted_word_bits(data))]
+
+
 def run(spec: ExperimentSpec) -> RunResult:
     """Build everything the spec describes, run it through the engine, and
     assemble the result. Deterministic per the spec's three seeds (dataset /
@@ -179,6 +197,7 @@ def run(spec: ExperimentSpec) -> RunResult:
     solver = build.build_solver(spec.solver, spec.compression)
     mesh = build.build_mesh(spec.schedule, data.n_clients)
     part = build.build_participation(spec)
+    x0 = build.build_x0(spec)
     sched = spec.schedule
 
     timings: List = []
@@ -186,6 +205,7 @@ def run(spec: ExperimentSpec) -> RunResult:
     state, metrics = engine.run(
         solver, obj, data, sched.rounds,
         key=jax.random.PRNGKey(spec.seed),
+        x0=x0,
         mode=sched.mode,
         block_size=sched.block_size,
         mesh=mesh,
@@ -222,10 +242,10 @@ def run(spec: ExperimentSpec) -> RunResult:
     # ints) times the per-round sampled-client counts replayed from the mask
     # schedule.
     n = data.n_clients
-    word = _transmitted_word_bits(data)
+    dim, leaf_words = _wire_layout(data, x0)
     counts = participation_lib.sampled_counts(part, sched.rounds, n)
-    payloads = _per_round_payload_bits(spec, data.dim, word, sched.rounds)
-    down_payloads = _per_round_downlink_bits(spec, data.dim, word, sched.rounds)
+    payloads = _per_round_payload_bits(spec, leaf_words, sched.rounds)
+    down_payloads = _per_round_downlink_bits(spec, leaf_words, sched.rounds)
     totals = [p * c for p, c in zip(payloads, counts)]
     down_totals = [p * c for p, c in zip(down_payloads, counts)]
 
@@ -258,7 +278,7 @@ def run(spec: ExperimentSpec) -> RunResult:
         solver=solver.name,
         rounds=sched.rounds,
         n_clients=n,
-        dim=data.dim,
+        dim=dim,
         metrics=metric_lists,
         sampled_clients=counts,
         uplink_bits_total=totals,

@@ -36,13 +36,14 @@ import json
 from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 from repro import comm
+from repro.configs import registry as model_registry
 from repro.core import engine
 from repro.core import participation as participation_lib
 from repro.data import synthetic
 
 SCHEMA_VERSION = 1
 
-_OBJECTIVE_KINDS = ("logreg", "quadratic")
+_OBJECTIVE_KINDS = ("logreg", "quadratic", "model")
 _PARTITION_SCHEMES = ("iid", "dirichlet")
 _DTYPES = ("float32", "float64")
 _MODES = ("scan", "host")
@@ -61,25 +62,75 @@ class ObjectiveSpec:
                       ``mu`` is the l2 coefficient.
     kind="quadratic"  per-client SPD quadratics (closed-form optimum; the
                       test family). ``mu`` is ignored.
+    kind="model"      federated LM fine-tuning: a registry architecture
+                      (``configs/registry``, e.g. ``"xlstm-350m"``) whose
+                      parameters are the optimization variable — a pytree,
+                      with autodiff oracles (grad by ``jax.grad``, HVP by
+                      jvp-over-grad) over ``data/tokens.py`` batches.
+                      ``mu`` is ignored; ``arch`` is required and the
+                      partition must be ``dataset="tokens"``.
+
+    arch      registry architecture id (kind="model" only).
+    seq_len   training sequence length per example (kind="model").
+    layers /  both 0 (default) runs the arch at FULL size; any nonzero
+    d_model   value swaps in ``ModelConfig.reduced(n_layers, d_model)``
+              (unset fields take reduced()'s defaults: 2 layers / 256 wide,
+              vocab 512) — the declarative CI-sized variant of the same
+              architecture, still instantiated from the registry.
     """
 
     kind: str = "logreg"
     mu: float = 1e-3
+    arch: Optional[str] = None
+    seq_len: int = 64
+    layers: int = 0
+    d_model: int = 0
 
     def __post_init__(self):
         _check_choice(self.kind, "objective kind", _OBJECTIVE_KINDS)
         if self.mu < 0:
             raise ValueError(f"mu must be non-negative, got {self.mu}")
+        if self.kind == "model":
+            if self.arch is None:
+                raise ValueError(
+                    "objective kind='model' requires arch= (a "
+                    f"configs/registry id: {model_registry.model_archs()})"
+                )
+            if self.arch not in model_registry.model_archs():
+                raise ValueError(
+                    f"unknown model arch {self.arch!r}; registered archs: "
+                    f"{model_registry.model_archs()}"
+                )
+            if self.seq_len < 2:
+                raise ValueError(
+                    f"seq_len must be >= 2 (next-token targets need at "
+                    f"least one transition), got {self.seq_len}"
+                )
+            if self.layers < 0 or self.d_model < 0:
+                raise ValueError(
+                    "layers/d_model must be >= 0 (0 = the arch's full "
+                    f"size), got layers={self.layers} d_model={self.d_model}"
+                )
+        elif self.arch is not None:
+            raise ValueError(
+                f"arch= applies to objective kind='model' only, got "
+                f"kind={self.kind!r} with arch={self.arch!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
 class PartitionSpec:
     """How client datasets are generated/partitioned.
 
-    dataset       a Table-1 name (``a1a``/``w7a``/``w8a``/``phishing``) or
+    dataset       a Table-1 name (``a1a``/``w7a``/``w8a``/``phishing``),
                   ``"custom"`` (then ``n_clients``/``samples_per_client``/
-                  ``dim`` are required). For quadratic objectives only the
-                  shape fields and ``cond`` are used.
+                  ``dim`` are required), or ``"tokens"`` (synthetic LM token
+                  streams from ``data/tokens.py`` for objective
+                  kind="model": ``n_clients``/``samples_per_client`` are
+                  required, ``samples_per_client`` counts sequences, and
+                  ``dim`` must stay None — the parameter dimension belongs
+                  to the model, not the data). For quadratic objectives only
+                  the shape fields and ``cond`` are used.
     scheme        ``"iid"`` (the original anchor-heterogeneity generator —
                   byte-identical to pre-API behavior) or ``"dirichlet"``
                   (label-skew: client class mixes ~ Dir(alpha)).
@@ -102,11 +153,36 @@ class PartitionSpec:
     def __post_init__(self):
         _check_choice(self.scheme, "partition scheme", _PARTITION_SCHEMES)
         _check_choice(self.dtype, "partition dtype", _DTYPES)
-        known = tuple(synthetic.PAPER_DATASETS) + ("custom",)
+        known = tuple(synthetic.PAPER_DATASETS) + ("custom", "tokens")
         if self.dataset not in known:
             raise ValueError(
                 f"unknown dataset {self.dataset!r}; have {known}"
             )
+        if self.dataset == "tokens":
+            missing = [
+                f for f in ("n_clients", "samples_per_client")
+                if getattr(self, f) is None
+            ]
+            if missing:
+                raise ValueError(
+                    f"dataset='tokens' requires {missing} to be set"
+                )
+            if self.dim is not None:
+                raise ValueError(
+                    "dataset='tokens' takes no dim= — the parameter "
+                    "dimension comes from the model config"
+                )
+            if self.scheme != "iid":
+                raise ValueError(
+                    "dataset='tokens' supports scheme='iid' only (clients "
+                    "get distinct slices of the seeded stream; Dirichlet "
+                    "label skew is a logreg notion)"
+                )
+            if self.dtype != "float32":
+                raise ValueError(
+                    "dataset='tokens' supports dtype='float32' only (the "
+                    "model config's param_dtype governs the wire width)"
+                )
         if self.dataset == "custom":
             missing = [
                 f for f in ("n_clients", "samples_per_client", "dim")
@@ -120,7 +196,11 @@ class PartitionSpec:
             raise ValueError(f"dirichlet alpha must be positive, got {self.alpha}")
 
     def resolved_shape(self) -> Tuple[int, int, int]:
-        """(n_clients, samples_per_client, dim) after applying overrides."""
+        """(n_clients, samples_per_client, dim) after applying overrides.
+        For ``tokens`` the dim slot is 0: the true dimension is the model's
+        parameter count, which only ``api.build`` (holding the config) knows."""
+        if self.dataset == "tokens":
+            return (self.n_clients, self.samples_per_client, 0)
         if self.dataset == "custom":
             return (self.n_clients, self.samples_per_client, self.dim)
         base = synthetic.PAPER_DATASETS[self.dataset]
@@ -367,6 +447,26 @@ class ExperimentSpec:
             raise ValueError(
                 "quadratic objectives support only partition scheme='iid'"
             )
+        if (self.objective.kind == "model") != (self.partition.dataset == "tokens"):
+            raise ValueError(
+                "objective kind='model' and partition dataset='tokens' come "
+                f"as a pair, got kind={self.objective.kind!r} with dataset="
+                f"{self.partition.dataset!r}"
+            )
+        if self.objective.kind == "model":
+            if self.schedule.mesh_devices is not None:
+                raise ValueError(
+                    "objective kind='model' runs on the scan/host schedules "
+                    "only for now — schedule.mesh_devices assumes flat "
+                    "(n, d) state (ROADMAP: 2-D mesh)"
+                )
+            if self.telemetry.f_star_newton_iters > 0:
+                raise ValueError(
+                    "telemetry.f_star_newton_iters needs the dense "
+                    "global-Hessian Newton reference, which model "
+                    "objectives (no local_hessian) cannot provide; set it "
+                    "to 0 for kind='model'"
+                )
         if self.compression is not None:
             if self.solver.name not in ("fednew", "fednl"):
                 raise ValueError(

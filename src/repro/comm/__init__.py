@@ -28,8 +28,11 @@ from repro.comm.codecs import (
     codec_names,
     encode_decode_tree,
     encode_decode_tree_one,
+    init_state_tree,
     normalize_spec,
     register_codec,
+    tree_payload_bits,
+    tree_payload_bits_metric,
 )
 from repro.comm.netsim import (
     ClientLinks,
@@ -51,6 +54,9 @@ __all__ = [
     "register_codec",
     "encode_decode_tree",
     "encode_decode_tree_one",
+    "init_state_tree",
+    "tree_payload_bits",
+    "tree_payload_bits_metric",
     "ClientLinks",
     "build_links",
     "round_time_s",

@@ -64,6 +64,7 @@ from repro.core.quantization import (
     exact_payload_bits,
     payload_bits,
     payload_bits_array,
+    word_bits,
 )
 from repro.kernels import dispatch
 
@@ -518,13 +519,49 @@ def build_codec(spec: CodecSpec, *, backend: str = "auto") -> Codec:
 # ---------------------------------------------------------------------------
 
 
+def init_state_tree(codec: Codec, n_clients: int, tree):
+    """Per-client codec state for a param pytree: one
+    ``(n, state_width(leaf_size))`` array per leaf — exactly the layout
+    ``encode_decode_tree`` consumes (each leaf is an independent codec
+    message, flattened to its own vector)."""
+    return jax.tree.map(
+        lambda l: codec.init_state(n_clients, int(l.size), l.dtype), tree
+    )
+
+
+def tree_payload_bits(codec: Codec, template, round_index: int = 0) -> int:
+    """EXACT Python-int uplink bits for ONE client's pytree message: the
+    codec applied leaf-wise means one payload per (client, leaf), so the
+    total is the per-leaf ``payload_bits`` summed over leaves — e.g.
+    ``bits·size + R_BITS`` per leaf for stoch_quant, matching
+    ``fednew_hf._uplink_bits``'s ``r_bits = R_BITS · n_leaves`` accounting.
+    ``template`` is any pytree with the transmitted shapes/dtypes (the
+    direction tree, or ``jax.eval_shape`` structs)."""
+    return sum(
+        codec.payload_bits(int(l.size), word_bits(l.dtype), round_index)
+        for l in jax.tree.leaves(template)
+    )
+
+
+def tree_payload_bits_metric(codec: Codec, template, step):
+    """Traced per-round counterpart of :func:`tree_payload_bits` (sum of the
+    per-leaf ``payload_bits_metric``; round-indexed codecs resolve the stage
+    from the traced ``step`` exactly as on the flat path)."""
+    total = None
+    for l in jax.tree.leaves(template):
+        b = codec.payload_bits_metric(int(l.size), word_bits(l.dtype), step)
+        total = b if total is None else total + b
+    return total
+
+
 def encode_decode_tree(codec: Codec, key, tree, state_tree, *, step=0):
     """Leaf-wise codec application over a per-client pytree: every
     ``(n_clients, ...)`` leaf is flattened to ``(n, leaf_size)``, encoded,
     and decoded back; per-leaf keys are ``fold_in(key, leaf_index)`` split
-    per client — exactly the key schedule the old hand-rolled
-    ``fednew_hf._quantize_clients`` used, so Q-FedNew-HF trajectories are
-    unchanged bit for bit. Returns ``(y_tx_tree, new_state_tree)``."""
+    per client — exactly the key schedule fednew_hf's original hand-rolled
+    quantizer used, so Q-FedNew-HF trajectories are unchanged bit for bit
+    (its step builders now call this directly). Returns
+    ``(y_tx_tree, new_state_tree)``."""
     leaves, treedef = jax.tree.flatten(tree)
     prev = jax.tree.leaves(state_tree)
     tx, states = [], []
@@ -545,9 +582,9 @@ def encode_decode_tree(codec: Codec, key, tree, state_tree, *, step=0):
 def encode_decode_tree_one(codec: Codec, key, tree, state_tree, *, step=0):
     """Single-client variant (the shard_map one-client-per-shard route):
     leaves have no leading client axis; the per-leaf key is used as the one
-    client's key directly — matching the old ``fednew_hf._quantize_one``
-    (``dispatch.quantize`` draws from the un-split per-leaf key, which equals
-    a batch of one with that key)."""
+    client's key directly — the schedule fednew_hf's shard_map step relies
+    on (``dispatch.quantize`` draws from the un-split per-leaf key, which
+    equals a batch of one with that key)."""
     leaves, treedef = jax.tree.flatten(tree)
     prev = jax.tree.leaves(state_tree)
     tx, states = [], []

@@ -32,6 +32,29 @@ def _expand_weights(w, v):
     return w.reshape(w.shape + (1,) * (v.ndim - 1)).astype(v.dtype)
 
 
+def bcast_clients(tree, n: int):
+    """Replicate a per-server pytree (or flat vector) to a leading client
+    axis: every leaf gains a broadcast ``(n, ...)`` view. The tree form of
+    the ``jnp.broadcast_to(x, (n,) + x.shape)`` idiom the flat solvers use."""
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), tree)
+
+
+def stack_zeros(tree, n: int):
+    """Per-client zeros shaped like ``tree`` with a leading client axis —
+    dual-variable initialization for arbitrary param pytrees."""
+    return jax.tree.map(lambda l: jnp.zeros((n,) + l.shape, l.dtype), tree)
+
+
+def mask_client_rows(mask, new, old):
+    """Per-client select over pytrees with a leading client axis: sampled
+    clients take the new rows, the rest keep their stale state."""
+    def one(nl, ol):
+        m = mask.reshape(mask.shape + (1,) * (nl.ndim - 1))
+        return jnp.where(m > 0, nl, ol)
+
+    return jax.tree.map(one, new, old)
+
+
 def tree_mean_clients(tree, axis_name: str | None = None, weights=None):
     """mean_i y_i: the ONLY cross-client communication in FedNew (eq. 13).
 

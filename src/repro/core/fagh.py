@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import admm
-from repro.core.objectives import ClientDataset, Objective
+from repro.core.hvp import tree_dot, tree_norm
+from repro.core.objectives import ClientDataset, Objective, is_param_tree
 from repro.core.participation import masked_bits_metric
 from repro.core.quantization import (
     exact_payload_bits,
@@ -102,7 +103,8 @@ def _check_hvp(obj: Objective) -> None:
             "fagh spends exactly one HVP per client per round and needs an "
             "Objective with a local_hvp oracle (objectives."
             "logistic_regression / objectives.quadratic provide closed-form "
-            "ones); this objective has none"
+            "ones; objectives.from_loss_fn derives one by autodiff); this "
+            "objective has none"
         )
 
 
@@ -112,6 +114,14 @@ def init(
 ) -> FAGHState:
     del cfg, key  # deterministic solver: no PRNG state carried
     _check_hvp(obj)
+    if x0 is not None and is_param_tree(x0):
+        # Pytree layout: x0 IS the param tree; the moments mirror it leaf-wise.
+        return FAGHState(
+            x=x0,
+            m=jax.tree.map(jnp.zeros_like, x0),
+            v=jax.tree.map(jnp.zeros_like, x0),
+            step=jnp.zeros((), jnp.int32),
+        )
     d = data.dim
     dtype = (
         data.features.dtype
@@ -127,6 +137,77 @@ def init(
     )
 
 
+def _step_tree(
+    state: FAGHState,
+    obj: Objective,
+    data,
+    cfg: FAGHConfig,
+    mask: Optional[jax.Array] = None,
+):
+    """The FAGH round over a param *pytree*: the same two-phase exchange as
+    the flat path below with every (d,) vector generalized leaf-wise — one
+    autodiff HVP per client per round against the broadcast momentum tree,
+    the curvature-along-momentum scalar from tree-wide inner products, and
+    the per-leaf word sizes in the exact bit count. The flat path never
+    routes here, so its lowering stays pinned."""
+    n_local = data.n_clients
+    t1 = (state.step + 1).astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(jnp.float32(cfg.beta), t1)
+    bc2 = 1.0 - jnp.power(jnp.float32(cfg.beta2), t1)
+
+    # Phase 1: gradients up, momentum direction formed PS-side.
+    g = obj.global_grad(state.x, data, weights=mask)
+    m = jax.tree.map(
+        lambda ml, gl: cfg.beta * ml + (1.0 - cfg.beta) * gl, state.m, g
+    )
+    mhat = jax.tree.map(lambda l: l / bc1.astype(l.dtype), m)
+
+    # Phase 2: the round's ONE HVP per client, against the broadcast mhat.
+    anchors = admm.bcast_clients(state.x, n_local)
+    u_i = obj.local_hvp(anchors, data, admm.bcast_clients(mhat, n_local))
+    u = admm.tree_mean_clients(u_i, None, weights=mask)  # = Hbar mhat
+    v = jax.tree.map(
+        lambda vl, ul: cfg.beta2 * vl + (1.0 - cfg.beta2) * ul, state.v, u
+    )
+    vhat = jax.tree.map(lambda l: l / bc2.astype(l.dtype), v)
+
+    # Quadratic-model line search along mhat, curvature floored at 0.
+    mm = tree_dot(mhat, mhat)
+    denom = jnp.maximum(tree_dot(mhat, vhat), 0.0) + cfg.damping * mm
+    alpha = jnp.where(mm > 0, mm / denom, jnp.zeros_like(mm))
+    update = jax.tree.map(lambda l: (cfg.lr * alpha).astype(l.dtype) * l, mhat)
+    x = jax.tree.map(lambda p, ul: p - ul, state.x, update)
+
+    # Empty round: freeze everything (see the flat path's comment).
+    if mask is not None:
+        live = jnp.sum(mask) > 0
+        sel = lambda new, old: jax.tree.map(
+            lambda nl, ol: jnp.where(live, nl, ol), new, old
+        )
+        x = sel(x, state.x)
+        m = sel(m, state.m)
+        v = sel(v, state.v)
+        update = sel(update, jax.tree.map(jnp.zeros_like, update))
+
+    # Per-leaf exact accounting: gradient + HVP result up, each leaf at its
+    # own word size (sums to word·2d for a uniform-dtype tree).
+    bits = payload_bits_array(sum(
+        exact_payload_bits(2 * int(l.size), word_bits(l))
+        for l in jax.tree.leaves(state.x)
+    ))
+    if mask is not None:
+        bits = masked_bits_metric(bits, mask, None)
+
+    new_state = FAGHState(x=x, m=m, v=v, step=state.step + 1)
+    metrics = FAGHMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=tree_norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=bits,
+        direction_norm=tree_norm(update),
+    )
+    return new_state, metrics
+
+
 def step(
     state: FAGHState,
     obj: Objective,
@@ -139,6 +220,15 @@ def step(
 ):
     """One FAGH round (see module docstring for the update rule)."""
     del n_global_clients  # no per-client PRNG: nothing to make shard-invariant
+    if is_param_tree(state.x):
+        if axis_name is not None:
+            raise ValueError(
+                "pytree FAGH states run on the scan/host schedules only; "
+                "the client mesh still assumes flat (d,) state (ROADMAP: "
+                "2-D mesh sharding clients x model is the follow-up)"
+            )
+        _check_hvp(obj)
+        return _step_tree(state, obj, data, cfg, mask)
     if axis_name is not None:
         obj = obj.with_axis(axis_name)
     _check_hvp(obj)

@@ -16,6 +16,14 @@ State layout mirrors Algorithm 1:
                    ŷ, historically the ``y_hat`` field), the error-feedback
                    residual for topk, width 0 for the identity codec
 
+Pytree layout: when ``init`` receives a param *pytree* as ``x0`` (a model
+objective — ``objectives.from_loss_fn``), every field generalizes leaf-wise:
+x/y are param trees, lam/curv stack a leading client axis onto every leaf
+(curv holds per-client anchor trees; matfree is mandatory), comm holds one
+``(n, width)`` codec-state array per leaf and the uplink applies the codec
+per (client, leaf) via ``comm.encode_decode_tree``. The flat path below is
+dispatched away from (``objectives.is_param_tree``) and stays bit-exact.
+
 The Hessian refresh rate r from the experiments maps to ``hessian_period``:
 r=1 -> 1, r=0.1 -> 10, r=0 -> 0 (never refresh; factor from x^0 is kept —
 the computation-efficient "zeroth Hessian" variant, one factorization ever).
@@ -70,7 +78,7 @@ import jax.scipy.linalg as jsl
 
 from repro import comm
 from repro.core import admm, hvp
-from repro.core.objectives import ClientDataset, Objective
+from repro.core.objectives import ClientDataset, Objective, is_param_tree
 from repro.core.quantization import word_bits
 from repro.kernels import dispatch
 
@@ -206,7 +214,8 @@ def _check_matfree(obj: Objective, cfg: FedNewConfig) -> None:
         raise ValueError(
             "hessian_repr='matfree' needs an Objective with a local_hvp "
             "oracle (objectives.logistic_regression / objectives.quadratic "
-            "provide closed-form ones); this objective has none"
+            "provide closed-form ones; objectives.from_loss_fn derives one "
+            "by autodiff); this objective has none"
         )
 
 
@@ -218,10 +227,46 @@ def _fresh_curv(obj: Objective, x, data, cfg: FedNewConfig, n_local: int):
     return _factorize(obj, x, data, cfg)
 
 
+def _check_tree_mode(cfg: FedNewConfig, axis_name=None) -> None:
+    if not cfg.matfree:
+        raise ValueError(
+            "pytree parameters need hessian_repr='matfree': the dense path "
+            "factorizes (n, d, d) Hessian blocks, which cannot exist for "
+            "model-scale param pytrees"
+        )
+    if axis_name is not None:
+        raise ValueError(
+            "pytree FedNew states run on the scan/host schedules only; the "
+            "client mesh still assumes flat (n, d) state (ROADMAP: 2-D mesh "
+            "sharding clients x model is the follow-up)"
+        )
+
+
+def _init_tree(
+    obj: Objective, data, cfg: FedNewConfig, key: jax.Array, x0
+) -> FedNewState:
+    """Pytree-layout init: x0 IS the model's param pytree (required — zeros
+    can't be conjured without the tree structure); per-client state stacks a
+    client axis onto every leaf, the codec state is per-leaf."""
+    _check_tree_mode(cfg)
+    n = data.n_clients
+    return FedNewState(
+        x=x0,
+        y=jax.tree.map(jnp.zeros_like, x0),
+        lam=admm.stack_zeros(x0, n),
+        curv=admm.bcast_clients(x0, n),
+        comm=comm.init_state_tree(cfg.build_codec(), n, x0),
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
 def init(
     obj: Objective, data: ClientDataset, cfg: FedNewConfig, key: jax.Array, x0=None
 ) -> FedNewState:
     _check_matfree(obj, cfg)
+    if x0 is not None and is_param_tree(x0):
+        return _init_tree(obj, data, cfg, key, x0)
     d = data.dim
     n = data.n_clients
     dtype = data.features.dtype if data.features.dtype in (jnp.float32, jnp.float64) else jnp.float32
@@ -270,6 +315,90 @@ def _mask_rows(mask, new, old):
 _client_keys = comm.client_keys
 
 
+def _step_tree(
+    state: FedNewState,
+    obj: Objective,
+    data,
+    cfg: FedNewConfig,
+    mask: Optional[jax.Array] = None,
+):
+    """One outer round over a param *pytree* — the same Algorithm 1 flow as
+    the flat path below, with every (n, d) stack generalized to per-leaf
+    (n, ...) trees: matfree CG on autodiff HVPs for eq. 9, per-leaf codec
+    application on the uplink (``comm.encode_decode_tree``), tree-generic
+    ADMM aggregation/dual update, per-leaf exact bit accounting. The flat
+    path is never routed here, so its lowering (and every bit-exactness pin)
+    is untouched."""
+    n_local = jax.tree.leaves(state.lam)[0].shape[0]
+    # -- local Hessian refresh: re-anchor sampled clients' curvature at x^k --
+    if cfg.hessian_period > 0:
+        refresh = (state.step % cfg.hessian_period) == 0
+        curv = jax.lax.cond(
+            refresh,
+            lambda: admm.bcast_clients(state.x, n_local),
+            lambda: state.curv,
+        )
+        if mask is not None:
+            curv = admm.mask_client_rows(mask, curv, state.curv)
+    else:
+        curv = state.curv
+
+    g_i = obj.local_grad(state.x, data)  # per-leaf (n, ...) — never transmitted
+
+    # -- eq. 9: batched damped CG on the autodiff HVP oracle ----------------
+    rhs = admm.admm_rhs(
+        g_i, state.lam, admm.bcast_clients(state.y, n_local), cfg.rho
+    )
+    y_i = hvp.cg_solve_clients(
+        lambda v: obj.local_hvp(curv, data, v),
+        rhs,
+        damping=cfg.damping,
+        iters=cfg.cg_iters,
+        tol=cfg.cg_tol,
+    ).x
+
+    # -- uplink compression: the codec applied leaf-wise --------------------
+    codec = cfg.build_codec()
+    if codec.needs_rng:
+        key, sub = jax.random.split(state.key)
+    else:
+        key, sub = state.key, state.key  # sub unused by deterministic codecs
+    y_i_tx, comm_state = comm.encode_decode_tree(
+        codec, sub, y_i, state.comm, step=state.step
+    )
+    if mask is not None:
+        comm_state = admm.mask_client_rows(mask, comm_state, state.comm)
+
+    # -- eqs. 13 + 12: the ONLY communication + dual update -----------------
+    y = admm.tree_mean_clients(y_i_tx, None, weights=mask)
+    lam = admm.dual_update(
+        state.lam, y_i_tx, admm.bcast_clients(y, n_local), cfg.rho,
+        weights=mask,
+    )
+
+    # -- exact per-leaf uplink accounting -----------------------------------
+    bits = comm.tree_payload_bits_metric(codec, y, state.step)
+    if mask is not None:
+        from repro.core import participation
+
+        bits = participation.masked_bits_metric(bits, mask, None)
+
+    x = jax.tree.map(lambda p, yl: p - yl, state.x, y)  # eq. 14
+
+    new_state = FedNewState(
+        x=x, y=y, lam=lam, curv=curv, comm=comm_state, key=key,
+        step=state.step + 1,
+    )
+    metrics = StepMetrics(
+        loss=obj.global_loss(x, data),
+        grad_norm=hvp.tree_norm(obj.global_grad(x, data)),
+        uplink_bits_per_client=bits,
+        dual_sum_residual=admm.dual_sum_residual(lam),
+        direction_norm=hvp.tree_norm(y),
+    )
+    return new_state, metrics
+
+
 def step(
     state: FedNewState,
     obj: Objective,
@@ -307,6 +436,10 @@ def step(
     # Engine contract: a sharded caller passes an obj already bound to this
     # axis (with_axis is idempotent then); the rebind here covers direct
     # callers, whose metrics would otherwise silently aggregate shard-local.
+    if is_param_tree(state.x):
+        _check_tree_mode(cfg, axis_name)
+        _check_matfree(obj, cfg)
+        return _step_tree(state, obj, data, cfg, mask)
     if axis_name is not None:
         obj = obj.with_axis(axis_name)
     _check_matfree(obj, cfg)

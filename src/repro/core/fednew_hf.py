@@ -76,16 +76,17 @@ def init(params, fed: FedConfig, n_clients: int) -> FedNewHFState:
     )
 
 
-def _quantize_clients(key, y_i, y_hat_prev, bits: int, backend: str = "auto"):
-    """Leaf-wise stochastic quantization of every client's direction —
-    a thin wrapper over ``repro.comm.encode_decode_tree`` (one codec
-    application per (client, leaf) block through the dispatch layer;
-    key-splitting identical across backends, the PR-2 bit-exact contract)."""
-    codec = comm.build_codec(
-        {"name": "stoch_quant", "bits": bits}, backend=backend
+def _build_codec(fed: FedConfig):
+    """The ``repro.comm`` codec a Q-FedNew-HF config transmits through
+    (``None`` unquantized). Built ONCE per step factory; the traced step
+    calls ``comm.encode_decode_tree``/``_tree_one`` directly — the same
+    per-(client, leaf) dispatch layer the registry solvers use, so the
+    PR-2 bit-exact key-splitting contract holds across both surfaces."""
+    if not fed.bits:
+        return None
+    return comm.build_codec(
+        {"name": "stoch_quant", "bits": fed.bits}, backend=fed.backend
     )
-    y_tx, _ = comm.encode_decode_tree(codec, key, y_i, y_hat_prev)
-    return y_tx
 
 
 def make_step_federated(
@@ -109,6 +110,7 @@ def make_step_federated(
     damping = fed.alpha + fed.rho
     sdt = jnp.dtype(fed.state_dtype)
     ax = client_axes if len(client_axes) > 1 else client_axes[0]
+    codec = _build_codec(fed)
 
     def step(state: FedNewHFState, client_batch, key=None):
         params, y_prev, anchor = state.params, state.y, state.anchor
@@ -139,7 +141,7 @@ def make_step_federated(
                     cidx = cidx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
                 ck = jax.random.fold_in(key, cidx)
                 y_hat_l = jax.tree.map(lambda x: x[0], y_hat)
-                y_i_tx = _quantize_one(ck, y_i, y_hat_l, fed.bits, fed.backend)
+                y_i_tx, _ = comm.encode_decode_tree_one(codec, ck, y_i, y_hat_l)
                 new_y_hat = jax.tree.map(lambda x: x[None], y_i_tx)
             else:
                 y_i_tx, new_y_hat = y_i, y_hat
@@ -218,17 +220,6 @@ def _uplink_bits(params, y_tx, fed: FedConfig) -> jax.Array:
     return quantization.payload_bits_array(total)
 
 
-def _quantize_one(key, y, y_hat_prev, bits: int, backend: str = "auto"):
-    """Leaf-wise quantization for a single client's direction tree (the
-    shard_map path: one client per shard) via
-    ``repro.comm.encode_decode_tree_one``."""
-    codec = comm.build_codec(
-        {"name": "stoch_quant", "bits": bits}, backend=backend
-    )
-    y_tx, _ = comm.encode_decode_tree_one(codec, key, y, y_hat_prev)
-    return y_tx
-
-
 def make_step(
     grad_fn: Callable,  # (params, batch) -> (loss, grads)
     hvp_fn: Callable,  # (params, batch, v) -> (H + 0*I) v  (undamped)
@@ -238,6 +229,7 @@ def make_step(
     carry the leading client axis."""
     damping = fed.alpha + fed.rho
     sdt = jnp.dtype(fed.state_dtype)
+    codec = _build_codec(fed)
 
     def step(state: FedNewHFState, client_batch, key=None):
         params = state.params
@@ -268,9 +260,7 @@ def make_step(
         n = jax.tree.leaves(client_batch)[0].shape[0]
         if fed.bits:
             assert key is not None, "Q-FedNew-HF needs a PRNG key per round"
-            y_i_tx = _quantize_clients(
-                key, y_i, state.y_hat, fed.bits, fed.backend
-            )
+            y_i_tx, _ = comm.encode_decode_tree(codec, key, y_i, state.y_hat)
             y_hat = y_i_tx
         else:
             y_i_tx, y_hat = y_i, state.y_hat

@@ -32,7 +32,6 @@ tests and 10^11-parameter models under pjit.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
@@ -62,6 +61,13 @@ def tree_axpy(alpha, x, y):
 
 def tree_scale(alpha, x):
     return jax.tree.map(lambda a: alpha * a, x)
+
+
+def tree_norm(x) -> jax.Array:
+    """||x|| over all leaves (accumulated per ``_acc_dtype``). The pytree
+    counterpart of ``jnp.linalg.norm`` on a flat vector; NOT substituted on
+    the flat solver paths, whose lowering is pinned bit-exact."""
+    return jnp.sqrt(tree_dot(x, x))
 
 
 def hvp(loss_fn: Callable, params, v, *args):
@@ -214,8 +220,6 @@ def make_damped_solver(loss_fn: Callable, damping: float, iters: int = 8):
     (H(params; batch) + damping I)^{-1} rhs with exact HVPs."""
 
     def solve(params, batch, rhs):
-        mv = partial(hvp, loss_fn, params, *(), )  # placeholder, see below
-
         def matvec(v):
             return hvp(loss_fn, params, v, batch)
 

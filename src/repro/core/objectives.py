@@ -1,4 +1,21 @@
-"""Client objectives for the paper-faithful FedNew path.
+"""Client objectives: the pytree-native oracle contract of the solver zoo.
+
+Two parameter layouts share ONE :class:`Objective` interface:
+
+  * the paper-faithful flat layout — ``x`` is a single ``(d,)`` array,
+    per-client quantities are ``(n, d)`` / ``(n, d, d)`` stacks, oracles are
+    closed-form (logreg eq. 31-32, quadratics);
+  * arbitrary param *pytrees* — ``x`` is a model's parameter tree (e.g.
+    ``models.lm.init_params``), per-client quantities carry a leading client
+    axis on every leaf, and the oracles come from autodiff over a loss
+    function (:func:`from_loss_fn`): gradients by ``jax.grad``, HVPs by
+    ``jax.jvp``-over-``grad`` (Pearlmutter), both ``vmap``-batched over the
+    client axis.
+
+The flat layout is literally the single-leaf special case — every consumer
+(``admm``, ``hvp.cg_solve_clients``, the engine) is tree-generic, and the
+solvers branch on :func:`is_param_tree` so the flat code paths (and their
+bit-exactness pins) are untouched.
 
 The paper evaluates regularized logistic regression (eq. 31-32):
 
@@ -16,16 +33,30 @@ distributed path shards the client axis of ``ClientDataset``).
 A quadratic objective is provided as a second family: FedNew on a quadratic
 is *exact* Newton after the inner ADMM converges, which gives tests a
 closed-form optimum to compare against.
+``logistic_regression_autodiff`` derives the logreg oracles by autodiff
+instead of the closed forms — the executable cross-check that the two
+derivations agree to machine precision (pinned in tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+# Treedef of a bare leaf: the flat (d,)-vector layout. Comparing treedefs is
+# trace-safe (an isinstance check on jax.Array would also match tracers of
+# pytree leaves and is wrong under vmap/scan).
+_LEAF_TREEDEF = jax.tree.structure(0)
+
+
+def is_param_tree(x) -> bool:
+    """True when ``x`` is a structured parameter pytree rather than the flat
+    paper-scale ``(d,)`` vector (a single bare array)."""
+    return jax.tree.structure(x) != _LEAF_TREEDEF
 
 
 @jax.tree_util.register_dataclass
@@ -45,23 +76,48 @@ class ClientDataset:
         return self.features.shape[-1]
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TokenDataset:
+    """Per-client LM training data: a batch pytree (``data/tokens.py``
+    layout — tokens/targets/loss_mask plus any modality stubs) whose leaves
+    all carry a leading client axis. The model-objective counterpart of
+    :class:`ClientDataset`; it has no ``dim`` — the parameter dimension
+    belongs to the param pytree, not the data."""
+
+    batch: Any
+
+    @property
+    def n_clients(self) -> int:
+        return jax.tree.leaves(self.batch)[0].shape[0]
+
+
 @dataclasses.dataclass(frozen=True)
 class Objective:
     """Bundle of per-client oracles. Every fn maps over the client axis.
 
+    Flat layout (x a (d,) array) / pytree layout (x a param pytree):
+
     local_loss(x, data)    -> (n,)
-    local_grad(x, data)    -> (n, d)
-    local_hessian(x, data) -> (n, d, d)
-    local_hvp(x, data, v)  -> (n, d)   [optional]
+    local_grad(x, data)    -> (n, d)       / per-leaf (n, ...) pytree
+    local_hessian(x, data) -> (n, d, d)    [optional — flat layout only]
+    local_hvp(x, data, v)  -> (n, d)       / per-leaf (n, ...) pytree
+                                           [optional]
 
     ``local_hvp`` is the matrix-free counterpart of ``local_hessian``: it
     applies every client's Hessian to a per-client vector batch without ever
     materializing a ``(d, d)`` block. Unlike the other oracles it takes a
-    *per-client* anchor batch ``x: (n, d)`` — FedNew's Hessian-refresh rate
-    means offline/stale clients keep curvature anchored at an older iterate,
-    so each client may differentiate at its own point. Solvers that need it
-    (``hessian_repr="matfree"``) check :attr:`has_hvp` and fail loudly when
-    an objective doesn't provide one.
+    *per-client* anchor batch ``x: (n, d)`` (pytree layout: every leaf gains
+    a leading client axis) — FedNew's Hessian-refresh rate means
+    offline/stale clients keep curvature anchored at an older iterate, so
+    each client may differentiate at its own point. Solvers that need it
+    (``hessian_repr="matfree"``, fagh) check :attr:`has_hvp` and fail loudly
+    when an objective doesn't provide one.
+
+    ``local_hessian`` is optional: autodiff model objectives
+    (:func:`from_loss_fn`) cannot materialize (d, d) blocks, so solvers on
+    the dense path check :attr:`has_hessian` first (``repro.api.build``
+    raises the capability error with the spec field and model named).
 
     ``axis_name`` makes the ``global_*`` aggregates mesh-aware: inside a
     ``shard_map`` manual region where ``data`` holds only this shard's
@@ -74,7 +130,7 @@ class Objective:
 
     local_loss: Callable
     local_grad: Callable
-    local_hessian: Callable
+    local_hessian: Callable | None = None
     local_hvp: Callable | None = None
     axis_name: str | None = None
 
@@ -83,15 +139,24 @@ class Objective:
         """True when the matrix-free ``local_hvp`` oracle is available."""
         return self.local_hvp is not None
 
+    @property
+    def has_hessian(self) -> bool:
+        """True when the dense ``local_hessian`` oracle is available."""
+        return self.local_hessian is not None
+
     def with_axis(self, axis_name: str | None) -> "Objective":
         """Shard-aware view of the same oracles (see class docstring)."""
         return dataclasses.replace(self, axis_name=axis_name)
 
-    def _agg(self, v: jax.Array, weights: jax.Array | None = None) -> jax.Array:
+    def _agg(self, v, weights: jax.Array | None = None):
         if weights is None:
-            v = jnp.mean(v, axis=0)
+            # tree.map over a bare array applies the fn directly, so the flat
+            # (single-array) layout lowers exactly as it always did.
+            v = jax.tree.map(lambda l: jnp.mean(l, axis=0), v)
             if self.axis_name is not None:
-                v = jax.lax.pmean(v, self.axis_name)
+                v = jax.tree.map(
+                    lambda l: jax.lax.pmean(l, self.axis_name), v
+                )
             return v
         # Weighted (participation-masked) aggregate: one definition of the
         # masked mean for the whole repo — solver aggregation (eq. 13) and
@@ -107,6 +172,12 @@ class Objective:
         return self._agg(self.local_grad(x, data), weights)
 
     def global_hessian(self, x, data: ClientDataset, weights=None) -> jax.Array:
+        if not self.has_hessian:
+            raise ValueError(
+                "this objective has no local_hessian oracle (autodiff model "
+                "objectives never materialize (d, d) blocks); use the "
+                "matrix-free local_hvp path instead"
+            )
         return self._agg(self.local_hessian(x, data), weights)
 
 
@@ -151,6 +222,78 @@ def logistic_regression(mu: float = 1e-3) -> Objective:
     hess = jax.vmap(partial(_logreg_hessian_1, mu=mu), in_axes=(None, 0, 0))
     # hvp maps per-client anchors AND per-client vectors (see Objective doc)
     hvp = jax.vmap(partial(_logreg_hvp_1, mu=mu), in_axes=(0, 0, 0, 0))
+    return Objective(
+        local_loss=lambda x, d: loss(x, d.features, d.labels),
+        local_grad=lambda x, d: grad(x, d.features, d.labels),
+        local_hessian=lambda x, d: hess(x, d.features, d.labels),
+        local_hvp=lambda x, d, v: hvp(x, v, d.features, d.labels),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Autodiff oracles over arbitrary param pytrees
+# ---------------------------------------------------------------------------
+
+
+def from_loss_fn(loss_fn: Callable) -> Objective:
+    """Autodiff oracle bundle for an arbitrary param pytree.
+
+    ``loss_fn(params, batch) -> scalar`` is ONE client's loss on ONE
+    client's batch (a pytree slice without the client axis — e.g.
+    ``lambda p, b: models.lm.train_loss(p, cfg, b)``). The oracles ``vmap``
+    it over the leading client axis of ``data.batch`` (:class:`TokenDataset`
+    or any container exposing a ``batch`` pytree):
+
+      local_loss(x, data)         -> (n,)
+      local_grad(x, data)         -> params tree, per-leaf leading n
+      local_hvp(anchors, data, v) -> params tree, per-leaf leading n
+
+    The HVP is the exact Pearlmutter product — ``jax.jvp`` over ``jax.grad``
+    (forward-over-reverse), so it works through scans, chunked losses, and
+    MoE dispatch. ``anchors`` is a *per-client* param pytree (leading client
+    axis on every leaf): the Hessian-refresh staleness contract of the flat
+    layout, verbatim.
+
+    No ``local_hessian`` is provided — a (d, d) block cannot exist at model
+    scale; dense-path solvers must check :attr:`Objective.has_hessian`.
+    """
+    grad1 = jax.grad(loss_fn)
+
+    def local_loss(x, data):
+        return jax.vmap(lambda b: loss_fn(x, b))(data.batch)
+
+    def local_grad(x, data):
+        return jax.vmap(lambda b: grad1(x, b))(data.batch)
+
+    def local_hvp(anchors, data, v):
+        def one(anchor, b, vi):
+            _, tangent = jax.jvp(lambda p: grad1(p, b), (anchor,), (vi,))
+            return tangent
+
+        return jax.vmap(one)(anchors, data.batch, v)
+
+    return Objective(
+        local_loss=local_loss, local_grad=local_grad, local_hvp=local_hvp
+    )
+
+
+def logistic_regression_autodiff(mu: float = 1e-3) -> Objective:
+    """The logreg oracles derived by autodiff — the single-(implicit-)leaf
+    cross-check of :func:`from_loss_fn`'s derivation strategy against
+    :func:`logistic_regression`'s closed forms (grad by ``jax.grad``, HVP by
+    jvp-over-grad, Hessian by ``jax.hessian``). Agreement to machine
+    precision is pinned in tests/test_lm_workload.py."""
+    loss1 = partial(_logreg_loss_1, mu=mu)
+    grad1 = jax.grad(loss1)
+
+    def hvp1(x, v, A, b):
+        _, tangent = jax.jvp(lambda p: grad1(p, A, b), (x,), (v,))
+        return tangent
+
+    loss = jax.vmap(loss1, in_axes=(None, 0, 0))
+    grad = jax.vmap(grad1, in_axes=(None, 0, 0))
+    hess = jax.vmap(jax.hessian(loss1), in_axes=(None, 0, 0))
+    hvp = jax.vmap(hvp1, in_axes=(0, 0, 0, 0))
     return Objective(
         local_loss=lambda x, d: loss(x, d.features, d.labels),
         local_grad=lambda x, d: grad(x, d.features, d.labels),

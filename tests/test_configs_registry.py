@@ -1,0 +1,62 @@
+"""Registry smoke suite: every registered arch constructs, reports a param
+count, and survives a field round-trip — the contract ``repro.api``'s
+kind='model' objectives rely on when a spec names an arch by id."""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCH_IDS, LONG_CONTEXT_OK, get_config, model_archs
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_constructs(arch):
+    cfg = get_config(arch)
+    assert isinstance(cfg, ModelConfig)
+    assert cfg.name == arch
+    assert cfg.n_layers >= 0 and cfg.d_model >= 0
+    # paper-logreg is the flat d=267 problem: no layers, no vocab
+    assert cfg.vocab_size >= (0 if arch == "paper-logreg" else 1)
+
+
+@pytest.mark.parametrize("arch", model_archs())
+def test_param_count(arch):
+    """Every model arch reports a full-size param count without allocating:
+    init under ``jax.eval_shape`` is abstract, so even dbrx-132b is cheap."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))
+    n = sum(int(s.size) for s in jax.tree.leaves(shapes))
+    assert n > 0
+    # reduced() must shrink it, and stay constructible
+    red = cfg.reduced(n_layers=1, d_model=32)
+    red_shapes = jax.eval_shape(
+        lambda k: lm.init_params(red, k), jax.random.PRNGKey(0)
+    )
+    n_red = sum(int(s.size) for s in jax.tree.leaves(red_shapes))
+    assert 0 < n_red < n
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_fields_round_trip(arch):
+    """dataclasses.replace with a config's own field values reproduces an
+    equal config — no __post_init__ mutation, no hidden state."""
+    cfg = get_config(arch)
+    fields = {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
+    assert dataclasses.replace(cfg, **fields) == cfg
+
+
+def test_registry_covers_long_context_table():
+    assert set(LONG_CONTEXT_OK) == set(model_archs())
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError, match="unknown arch"):
+        get_config("not-an-arch")
+
+
+def test_paper_logreg_excluded_from_model_archs():
+    assert "paper-logreg" in ARCH_IDS
+    assert "paper-logreg" not in model_archs()

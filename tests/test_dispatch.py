@@ -202,7 +202,10 @@ def test_legacy_use_kernel_maps_to_pallas_solve(monkeypatch):
 
 
 def test_fednew_hf_leafwise_kernel_route_bit_exact():
-    from repro.core import fednew_hf
+    """The leaf-wise quantize route fednew_hf's step builders call
+    (``comm.encode_decode_tree`` with the backend-dispatched stoch_quant
+    codec) must be bit-exact across backends."""
+    from repro import comm
 
     key = jax.random.PRNGKey(11)
     tree = {
@@ -210,14 +213,17 @@ def test_fednew_hf_leafwise_kernel_route_bit_exact():
         "b": jax.random.normal(jax.random.fold_in(key, 1), (4, 17), jnp.float32),
     }
     prev = jax.tree.map(jnp.zeros_like, tree)
+
+    def route(backend):
+        codec = comm.build_codec(
+            {"name": "stoch_quant", "bits": 3}, backend=backend
+        )
+        return comm.encode_decode_tree(codec, key, tree, prev)[0]
+
     # jit both routes, as the train step does: the bit-exactness contract is
     # between compiled programs (eager op-by-op rounding can differ by ulps
     # from XLA's folded constants on either path)
-    ref = jax.jit(
-        lambda: fednew_hf._quantize_clients(key, tree, prev, 3, backend="reference")
-    )()
-    ker = jax.jit(
-        lambda: fednew_hf._quantize_clients(key, tree, prev, 3, backend="pallas")
-    )()
+    ref = jax.jit(lambda: route("reference"))()
+    ker = jax.jit(lambda: route("pallas"))()
     for leaf_r, leaf_k in zip(jax.tree.leaves(ref), jax.tree.leaves(ker)):
         np.testing.assert_array_equal(np.asarray(leaf_r), np.asarray(leaf_k))
