@@ -42,6 +42,27 @@ def rounds_to_rel_gap(losses, f_star: float, rel: float) -> int:
     return -1
 
 
+def seconds_to_rel_gap(losses, round_time_s, f_star: float,
+                       rel: float) -> float:
+    """Cumulative simulated seconds when the loss first comes within ``rel``
+    of f*; -1.0 if never. Unlike :func:`rounds_to_rel_gap` this never
+    assumes uniform rounds: event-mode RunResults carry a VARIABLE
+    wall-clock per server step (``simulated_round_s`` is the inter-flush
+    delta), so the time axis must be integrated, not scaled."""
+    if len(losses) != len(round_time_s):
+        raise ValueError(
+            f"losses ({len(losses)}) and round_time_s ({len(round_time_s)}) "
+            f"must align one server step to one duration"
+        )
+    target = f_star + rel * abs(f_star)
+    acc = 0.0
+    for loss, dt in zip(losses, round_time_s):
+        acc += dt
+        if loss <= target:
+            return acc
+    return -1.0
+
+
 def rounds_to_gap(losses, f_star, target: float) -> int:
     """First round index whose optimality gap <= target (or -1)."""
     gaps = jnp.asarray(losses) - f_star

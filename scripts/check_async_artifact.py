@@ -1,0 +1,80 @@
+"""Schema assertion for the benchmarks/async_frontier.py artifact.
+
+CI smoke leg: ``python scripts/check_async_artifact.py \
+benchmarks/out/async_frontier.json`` after running the suite with
+``EVENTS_SMOKE=1``. Also validates the tracked repo-root
+``BENCH_async_frontier.json`` headline point.
+
+Checks structure and exact-ledger typing (bit counts must be ints, not
+floats) plus the event-mode invariants a schema can see — sync/async rows
+at both codecs, a per-step time axis that genuinely VARIES for async (the
+whole point of mode='events'), O(sampled) state accounting present — not
+benchmark outcomes; the full suite enforces the dominance headline itself.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+_RUN_KEYS = {
+    "label", "mode", "buffer_size", "codec", "server_steps",
+    "final_rel_gap", "seconds_to_target", "simulated_time_s",
+    "cumulative_uplink_bits_total", "peak_state_bytes", "frontier",
+}
+_FRONTIER_KEYS = {"rel_gap", "sim_time_s"}
+_HEADLINE_KEYS = {
+    "target_rel_gap", "sync_seconds_to_target", "async_seconds_to_target",
+    "speedups", "pass",
+}
+
+
+def check_payload(payload: dict) -> None:
+    """Raise AssertionError if the artifact doesn't match the schema."""
+    assert set(payload) == {"config", "runs", "async_vs_sync"}, sorted(payload)
+    cfg = payload["config"]
+    for key in ("smoke", "sync_steps", "async_steps", "buffer_size",
+                "cohort", "compute_s", "f_star", "n_clients", "dim",
+                "network"):
+        assert key in cfg, f"config missing {key!r}"
+    assert isinstance(cfg["buffer_size"], int) and cfg["buffer_size"] >= 1
+    assert payload["runs"], "no runs recorded"
+    modes = set()
+    for run in payload["runs"]:
+        assert set(run) == _RUN_KEYS, (run.get("label"), sorted(run))
+        assert set(run["frontier"]) == _FRONTIER_KEYS
+        lengths = {len(v) for v in run["frontier"].values()}
+        assert lengths == {run["server_steps"]}, (run["label"], lengths)
+        assert isinstance(run["cumulative_uplink_bits_total"], int), (
+            "uplink ledger must stay an exact int"
+        )
+        assert isinstance(run["peak_state_bytes"], int), (
+            "state accounting must stay an exact int"
+        )
+        assert run["simulated_time_s"] > 0
+        ts = run["frontier"]["sim_time_s"]
+        assert all(b > a for a, b in zip(ts, ts[1:])), (
+            f"{run['label']}: simulated time must strictly increase"
+        )
+        if run["mode"] == "async" and run["server_steps"] > 2:
+            deltas = {round(b - a, 9) for a, b in zip(ts, ts[1:])}
+            assert len(deltas) > 1, (
+                f"{run['label']}: async step times all identical — the "
+                f"event heap is not actually driving the clock"
+            )
+        modes.add(run["mode"])
+    assert modes == {"sync", "async"}, f"frontier needs both modes: {modes}"
+    headline = payload["async_vs_sync"]
+    assert set(headline) == _HEADLINE_KEYS, sorted(headline)
+    if not cfg["smoke"]:
+        assert headline["pass"] is True, headline
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        check_payload(json.load(f))
+    print(f"async_frontier artifact OK: {path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

@@ -67,3 +67,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # ledgers, netsim pricing, and the frontier artifact cannot silently rot.
 SOLVER_SMOKE=1 BENCH_ROUNDS=4 python -m benchmarks.run --only solver_frontier
 python scripts/check_frontier_artifact.py benchmarks/out/solver_frontier.json
+
+# Event-runtime smoke leg: the sync-vs-async frontier at tiny dims through
+# the real harness (streamed cohorts, the event heap, buffered-async
+# FedNew), schema-checked — the event clock, staleness weighting, and the
+# O(sampled) state accounting cannot silently rot. The tracked repo-root
+# headline point (BENCH_async_frontier.json) is validated against the same
+# schema so a stale refresh fails here too.
+EVENTS_SMOKE=1 BENCH_ROUNDS=4 python -m benchmarks.run --only async_frontier
+python scripts/check_async_artifact.py benchmarks/out/async_frontier.json
+python scripts/check_async_artifact.py BENCH_async_frontier.json

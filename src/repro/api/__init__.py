@@ -36,6 +36,7 @@ from repro.api.build import (
 from repro.api.runner import RunResult, run, run_components
 from repro.api.specs import (
     SCHEMA_VERSION,
+    ArrivalSpec,
     CompressionSpec,
     ExperimentSpec,
     NetworkSpec,
@@ -58,6 +59,7 @@ __all__ = [
     "TelemetrySpec",
     "CompressionSpec",
     "NetworkSpec",
+    "ArrivalSpec",
     "RunResult",
     "run",
     "run_components",

@@ -63,9 +63,23 @@ def build_objective(spec: ObjectiveSpec) -> objectives.Objective:
         from repro.models import lm
 
         cfg = build_model_config(spec)
-        return objectives.from_loss_fn(
-            lambda params, batch: lm.train_loss(params, cfg, batch)
-        )
+        loss_fn = lambda params, batch: lm.train_loss(params, cfg, batch)
+        if spec.hvp == "gauss_newton":
+            # GN cut at lm.backbone_features: the curvature of the convex
+            # head (chunked CE + the router aux term, both convex in the
+            # features/aux) pulled back through the backbone Jacobian — PSD
+            # by construction (pinned in tests/test_lm_workload.py).
+            return objectives.from_loss_fn(
+                loss_fn,
+                hvp="gauss_newton",
+                predict_fn=lambda params, batch: lm.backbone_features(
+                    params, cfg, batch
+                ),
+                pred_loss_fn=lambda params, z, batch: lm.head_loss(
+                    params, cfg, z[0], batch
+                ) + (cfg.router_aux_coef * z[1] if cfg.is_moe else 0.0),
+            )
+        return objectives.from_loss_fn(loss_fn)
     return objectives.logistic_regression(mu=spec.mu)
 
 
@@ -91,7 +105,8 @@ def build_dataset(
             kind="train",
         )
         batch = tokens.client_batches(
-            cfg, shape, n_clients=n, seed=pspec.seed, step=0
+            cfg, shape, n_clients=n, seed=pspec.seed, step=0,
+            scheme=pspec.scheme, alpha=pspec.alpha,
         )
         return objectives.TokenDataset(batch=batch)
     if pspec.dataset == "custom":

@@ -111,6 +111,12 @@ class RunResult:
     )
     simulated_round_s: Optional[List[float]] = None
     simulated_time_s: Optional[float] = None
+    # Events-mode extras (``ScheduleSpec(mode="events")`` — repro.events):
+    # the audited resident-state high-water mark of the streamed-cohort
+    # executor, and how many dispatches the dropout law ate. None for the
+    # synchronous schedules.
+    peak_state_bytes: Optional[int] = None
+    n_dropped: Optional[int] = None
 
     @property
     def final_loss(self) -> float:
@@ -188,10 +194,113 @@ def _wire_layout(data, x0):
     return data.dim, [(data.dim, _transmitted_word_bits(data))]
 
 
+def _running_sum(values: List[int]) -> List[int]:
+    out, acc = [], 0
+    for v in values:
+        acc += v
+        out.append(acc)
+    return out
+
+
+def _run_events(spec: ExperimentSpec) -> RunResult:
+    """The ``mode="events"`` runner: event-driven FedNew through
+    ``repro.events.runtime.run_events``. Per-server-step series replace the
+    per-round ones — ``simulated_round_s`` entries are the (variable)
+    simulated seconds between consecutive server steps, and ``rounds`` is
+    the number of steps the event loop actually completed (an arrival trace
+    can exhaust early)."""
+    from repro.api.specs import ArrivalSpec
+    from repro.events import arrivals as arrivals_lib
+    from repro.events import fedbuff, runtime as events_runtime
+    from repro.events import sim as events_sim
+
+    obj, data = build.build_problem(spec)
+    n = data.n_clients
+    aspec = spec.arrival if spec.arrival is not None else ArrivalSpec()
+    net = spec.network
+
+    cfg = fedbuff.FedNewAsyncConfig(
+        **build._merged_solver_hparams(spec.solver, spec.compression)
+    )
+    fleet = events_sim.build_fleet(
+        n,
+        uplink_mbps=net.uplink_mbps,
+        downlink_mbps=net.downlink_mbps,
+        latency_s=net.latency_s,
+        compute_s=aspec.compute_s,
+        heterogeneity=net.heterogeneity,
+        sigma=net.sigma,
+        seed=net.seed,
+    )
+    if aspec.kind == "poisson":
+        trace = arrivals_lib.poisson_trace(
+            n, aspec.rate_per_s, aspec.horizon_s, aspec.seed
+        )
+    elif aspec.kind == "trace":
+        trace = arrivals_lib.load_trace(aspec.trace_path, n)
+    else:
+        trace = None
+
+    t0 = time.perf_counter()
+    res = events_runtime.run_events(
+        cfg, obj, data, fleet,
+        server_steps=spec.schedule.rounds,
+        # the spec default (64) should work on any fleet; a cohort can never
+        # exceed it anyway
+        cohort=min(aspec.cohort, n),
+        key=jax.random.PRNGKey(spec.seed),
+        arrival_trace=trace,
+        dropout_prob=aspec.dropout_prob,
+        seed=aspec.seed,
+        cache_capacity=aspec.cache_capacity,
+        checkpoint_dir=aspec.checkpoint_dir,
+        eval_cohort=aspec.eval_cohort,
+    )
+    wall = time.perf_counter() - t0
+
+    metric_lists = dict(res.metrics)
+    f_star = None
+    if spec.telemetry.f_star_newton_iters > 0:
+        from repro.core import baselines
+
+        _, fs = baselines.reference_optimum(
+            obj, data, iters=spec.telemetry.f_star_newton_iters
+        )
+        f_star = float(fs)
+        metric_lists["gap"] = [l - f_star for l in metric_lists["loss"]]
+
+    cumulative = _running_sum(res.uplink_bits_total)
+    result = RunResult(
+        spec=spec.to_dict(),
+        solver=spec.solver.name,
+        rounds=res.n_server_steps,
+        n_clients=n,
+        dim=data.dim,
+        metrics=metric_lists,
+        sampled_clients=res.contributors,
+        uplink_bits_total=res.uplink_bits_total,
+        cumulative_uplink_bits_total=cumulative,
+        cumulative_uplink_bits_per_client=[c / n for c in cumulative],
+        wall_clock_s=wall,
+        f_star=f_star,
+        downlink_bits_total=res.downlink_bits_total,
+        cumulative_downlink_bits_total=_running_sum(res.downlink_bits_total),
+        simulated_round_s=res.round_time_s,
+        simulated_time_s=res.simulated_time_s,
+        peak_state_bytes=res.peak_state_bytes,
+        n_dropped=res.n_dropped,
+    )
+    if spec.telemetry.save_path:
+        result.save_json(spec.telemetry.save_path)
+    return result
+
+
 def run(spec: ExperimentSpec) -> RunResult:
     """Build everything the spec describes, run it through the engine, and
     assemble the result. Deterministic per the spec's three seeds (dataset /
     run / participation)."""
+    if spec.schedule.mode == "events":
+        return _run_events(spec)
     obj, data = build.build_problem(spec)
     build.check_solver_objective(spec, obj)
     solver = build.build_solver(spec.solver, spec.compression)
@@ -249,14 +358,7 @@ def run(spec: ExperimentSpec) -> RunResult:
     totals = [p * c for p, c in zip(payloads, counts)]
     down_totals = [p * c for p, c in zip(down_payloads, counts)]
 
-    def running_sum(values: List[int]) -> List[int]:
-        out, acc = [], 0
-        for v in values:
-            acc += v
-            out.append(acc)
-        return out
-
-    cumulative = running_sum(totals)
+    cumulative = _running_sum(totals)
 
     # Simulated synchronous-round wall-clock under the spec's link model,
     # driven by the exact per-message ledgers and the replayed masks.
@@ -291,7 +393,7 @@ def run(spec: ExperimentSpec) -> RunResult:
         steady_rounds=steady_rounds,
         f_star=f_star,
         downlink_bits_total=down_totals,
-        cumulative_downlink_bits_total=running_sum(down_totals),
+        cumulative_downlink_bits_total=_running_sum(down_totals),
         simulated_round_s=sim_round_s,
         simulated_time_s=sim_total_s,
     )

@@ -46,7 +46,8 @@ SCHEMA_VERSION = 1
 _OBJECTIVE_KINDS = ("logreg", "quadratic", "model")
 _PARTITION_SCHEMES = ("iid", "dirichlet")
 _DTYPES = ("float32", "float64")
-_MODES = ("scan", "host")
+_MODES = ("scan", "host", "events")
+_HVP_KINDS = ("exact", "gauss_newton")
 
 
 def _check_choice(value, name: str, choices) -> None:
@@ -77,6 +78,12 @@ class ObjectiveSpec:
               (unset fields take reduced()'s defaults: 2 layers / 256 wide,
               vocab 512) — the declarative CI-sized variant of the same
               architecture, still instantiated from the registry.
+    hvp       kind="model" only: ``"exact"`` (Pearlmutter jvp-over-grad —
+              the historical oracle, bit for bit) or ``"gauss_newton"``
+              (J^T H_pred J over the ``models.lm.backbone_features`` /
+              ``head_loss`` cut — PSD by construction, so indefinite
+              raw-init curvature never needs the damping to dominate it;
+              see docs/lm_workload.md).
     """
 
     kind: str = "logreg"
@@ -85,9 +92,17 @@ class ObjectiveSpec:
     seq_len: int = 64
     layers: int = 0
     d_model: int = 0
+    hvp: str = "exact"
 
     def __post_init__(self):
         _check_choice(self.kind, "objective kind", _OBJECTIVE_KINDS)
+        _check_choice(self.hvp, "objective hvp", _HVP_KINDS)
+        if self.hvp != "exact" and self.kind != "model":
+            raise ValueError(
+                "hvp='gauss_newton' applies to objective kind='model' only "
+                "(the flat objectives' closed-form Hessians are already "
+                f"PSD), got kind={self.kind!r}"
+            )
         if self.mu < 0:
             raise ValueError(f"mu must be non-negative, got {self.mu}")
         if self.kind == "model":
@@ -172,12 +187,9 @@ class PartitionSpec:
                     "dataset='tokens' takes no dim= — the parameter "
                     "dimension comes from the model config"
                 )
-            if self.scheme != "iid":
-                raise ValueError(
-                    "dataset='tokens' supports scheme='iid' only (clients "
-                    "get distinct slices of the seeded stream; Dirichlet "
-                    "label skew is a logreg notion)"
-                )
+            # scheme="dirichlet" is document-topic skew over the token
+            # streams (data/tokens.dirichlet_assignment) — the LM mirror of
+            # make_dirichlet_dataset's label skew.
             if self.dtype != "float32":
                 raise ValueError(
                     "dataset='tokens' supports dtype='float32' only (the "
@@ -246,8 +258,13 @@ class SolverSpec:
 class ScheduleSpec:
     """How rounds execute (the engine's schedule knobs).
 
-    mode          ``"scan"`` (lax.scan-compiled blocks, default) or
-                  ``"host"`` (legacy bit-exact per-round loop).
+    mode          ``"scan"`` (lax.scan-compiled blocks, default),
+                  ``"host"`` (legacy bit-exact per-round loop), or
+                  ``"events"`` (the event-driven runtime, ``repro.events``:
+                  streamed cohorts + arrival traces + buffered-async
+                  aggregation; ``rounds`` then counts SERVER STEPS and the
+                  spec needs a ``network`` section — see the ``arrival``
+                  section for the event-mode knobs).
     block_size    rounds per compiled scan block (None = engine default).
     mesh_devices  None (no mesh) | int (1-D client mesh over that many
                   devices) | ``"auto"`` (largest local device count dividing
@@ -278,6 +295,11 @@ class ScheduleSpec:
                     "mesh runs are always scan-compiled; use mode='scan' "
                     "with mesh_devices"
                 )
+        if self.mode == "events" and self.block_size is not None:
+            raise ValueError(
+                "mode='events' has no scan blocks (the event loop is "
+                "host-driven); drop block_size"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -384,6 +406,78 @@ class NetworkSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """Event-mode client arrivals + runtime knobs (``repro.events``; only
+    meaningful with ``ScheduleSpec(mode="events")``).
+
+    kind            ``"closed_loop"`` (the server keeps ``cohort`` clients
+                    in flight, round-robin — the barrier/degeneracy mode),
+                    ``"poisson"`` (open-loop fleet-wide Poisson arrivals),
+                    or ``"trace"`` (replay ``trace_path``: lines of
+                    ``t_s client_id``).
+    cohort          barrier cohort size / async max-in-flight.
+    rate_per_s      Poisson fleet arrival rate (kind="poisson").
+    horizon_s       Poisson trace length in simulated seconds.
+    trace_path      arrival trace file (kind="trace").
+    dropout_prob    per-dispatch Bernoulli dropout (async only): the upload
+                    never lands, the broadcast bits are still spent.
+    compute_s       nominal per-client local-solve seconds added to each
+                    dispatch's service time (heterogeneity follows the
+                    network section's lognormal law).
+    seed            arrival/dropout PRNG seed.
+    cache_capacity  resident rows in the streamed-cohort state cache.
+    checkpoint_dir  spill directory for evicted client rows (repro.checkpoint).
+    eval_cohort     fixed loss-telemetry panel size (events mode never
+                    materializes the fleet to evaluate).
+    """
+
+    kind: str = "closed_loop"
+    cohort: int = 64
+    rate_per_s: float = 1.0
+    horizon_s: float = 3600.0
+    trace_path: Optional[str] = None
+    dropout_prob: float = 0.0
+    compute_s: float = 0.0
+    seed: int = 0
+    cache_capacity: int = 4096
+    checkpoint_dir: Optional[str] = None
+    eval_cohort: int = 64
+
+    def __post_init__(self):
+        from repro.events import arrivals as arrivals_lib
+
+        _check_choice(self.kind, "arrival kind", arrivals_lib.ARRIVAL_KINDS)
+        if self.cohort < 1:
+            raise ValueError(f"cohort must be >= 1, got {self.cohort}")
+        if self.kind == "poisson" and (
+            self.rate_per_s <= 0 or self.horizon_s <= 0
+        ):
+            raise ValueError(
+                "kind='poisson' needs positive rate_per_s and horizon_s"
+            )
+        if self.kind == "trace" and not self.trace_path:
+            raise ValueError("kind='trace' requires trace_path")
+        if self.trace_path and self.kind != "trace":
+            raise ValueError(
+                f"trace_path applies to kind='trace' only, got {self.kind!r}"
+            )
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError(
+                f"dropout_prob must be in [0, 1), got {self.dropout_prob}"
+            )
+        if self.compute_s < 0:
+            raise ValueError(f"compute_s must be >= 0, got {self.compute_s}")
+        if self.cache_capacity < 1:
+            raise ValueError(
+                f"cache_capacity must be >= 1, got {self.cache_capacity}"
+            )
+        if self.eval_cohort < 1:
+            raise ValueError(
+                f"eval_cohort must be >= 1, got {self.eval_cohort}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
 class TelemetrySpec:
     """What to record beyond the per-round engine metrics.
 
@@ -416,10 +510,11 @@ _SECTIONS = {
     "telemetry": TelemetrySpec,
     "compression": CompressionSpec,
     "network": NetworkSpec,
+    "arrival": ArrivalSpec,
 }
 
 # Sections that may be absent entirely (serialized as JSON null).
-_OPTIONAL_SECTIONS = ("compression", "network")
+_OPTIONAL_SECTIONS = ("compression", "network", "arrival")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -439,6 +534,7 @@ class ExperimentSpec:
     telemetry: TelemetrySpec = TelemetrySpec()
     compression: Optional[CompressionSpec] = None
     network: Optional[NetworkSpec] = None
+    arrival: Optional[ArrivalSpec] = None
     seed: int = 0
     name: str = ""
 
@@ -467,12 +563,50 @@ class ExperimentSpec:
                     "objectives (no local_hessian) cannot provide; set it "
                     "to 0 for kind='model'"
                 )
+        if self.schedule.mode == "events":
+            if self.solver.name != "fednew-async":
+                raise ValueError(
+                    "mode='events' runs the buffered-asynchronous runtime, "
+                    "whose solver is 'fednew-async' (buffer_size=0 IS "
+                    f"synchronous FedNew, bit for bit), got solver "
+                    f"{self.solver.name!r}"
+                )
+            if self.network is None:
+                raise ValueError(
+                    "mode='events' prices bits into simulated seconds and "
+                    "needs a network= section for the per-client link model"
+                )
+            if self.objective.kind == "model":
+                raise ValueError(
+                    "mode='events' streams flat (n, d) client state; model "
+                    "(pytree) objectives run mode='scan'/'host' (async LM "
+                    "fine-tuning is a ROADMAP follow-up)"
+                )
+            if self.participation.fraction != 1.0:
+                raise ValueError(
+                    "mode='events' owns its own client scheduling (cohorts "
+                    "and arrival traces replace per-round sampling); drop "
+                    "the participation fraction"
+                )
+            hp = self.solver.hparams.get("hessian_period", 1)
+            if hp != 1:
+                raise ValueError(
+                    "mode='events' requires hessian_period=1: event-mode "
+                    "clients re-derive curvature from the dispatch iterate "
+                    "(the stateless-streaming contract)"
+                )
+        elif self.arrival is not None:
+            raise ValueError(
+                "arrival= is the event-runtime section; it requires "
+                f"schedule mode='events', got mode={self.schedule.mode!r}"
+            )
         if self.compression is not None:
-            if self.solver.name not in ("fednew", "fednl"):
+            if self.solver.name not in ("fednew", "fednew-async", "fednl"):
                 raise ValueError(
                     "compression= applies to the codec-carrying solvers "
-                    "'fednew' and 'fednl' only (q-fednew is fednew + the "
-                    f"stoch_quant codec), got solver {self.solver.name!r}"
+                    "'fednew', 'fednew-async' and 'fednl' only (q-fednew is "
+                    f"fednew + the stoch_quant codec), got solver "
+                    f"{self.solver.name!r}"
                 )
             clash = [k for k in ("bits", "codec") if k in self.solver.hparams]
             if clash:

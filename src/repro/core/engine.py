@@ -114,6 +114,7 @@ def _registry() -> dict:
     config dataclass's fields before construction, so typos surface as named
     errors instead of opaque dataclass ``TypeError``s."""
     from repro.core import baselines, fagh, fednew, fednl, fedns
+    from repro.events import fedbuff
 
     def entry(factory, cfg_cls, ledger):
         if cfg_cls is None:
@@ -132,6 +133,9 @@ def _registry() -> dict:
     return {
         "fednew": fednew_entry,
         "q-fednew": fednew_entry,
+        "fednew-async": entry(
+            fedbuff.solver, fedbuff.FedNewAsyncConfig, fedbuff.ledger
+        ),
         "fednl": entry(fednl.solver, fednl.FedNLConfig, fednl.ledger),
         "fedns": entry(fedns.solver, fedns.FedNSConfig, fedns.ledger),
         "fagh": entry(fagh.solver, fagh.FAGHConfig, fagh.ledger),

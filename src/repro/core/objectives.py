@@ -235,7 +235,13 @@ def logistic_regression(mu: float = 1e-3) -> Objective:
 # ---------------------------------------------------------------------------
 
 
-def from_loss_fn(loss_fn: Callable) -> Objective:
+def from_loss_fn(
+    loss_fn: Callable,
+    *,
+    hvp: str = "exact",
+    predict_fn: Callable | None = None,
+    pred_loss_fn: Callable | None = None,
+) -> Objective:
     """Autodiff oracle bundle for an arbitrary param pytree.
 
     ``loss_fn(params, batch) -> scalar`` is ONE client's loss on ONE
@@ -248,15 +254,38 @@ def from_loss_fn(loss_fn: Callable) -> Objective:
       local_grad(x, data)         -> params tree, per-leaf leading n
       local_hvp(anchors, data, v) -> params tree, per-leaf leading n
 
-    The HVP is the exact Pearlmutter product — ``jax.jvp`` over ``jax.grad``
-    (forward-over-reverse), so it works through scans, chunked losses, and
-    MoE dispatch. ``anchors`` is a *per-client* param pytree (leading client
-    axis on every leaf): the Hessian-refresh staleness contract of the flat
-    layout, verbatim.
+    ``hvp`` selects the curvature oracle:
+
+      * ``"exact"`` (default) — the Pearlmutter product, ``jax.jvp`` over
+        ``jax.grad`` (forward-over-reverse): the true Hessian, which for a
+        non-convex backbone is indefinite.
+      * ``"gauss_newton"`` — the generalized Gauss-Newton product through a
+        declared cut ``loss = pred_loss_fn(params, predict_fn(params, b), b)``:
+        ``J^T H_pred J v`` where ``J`` is the backbone Jacobian at the cut and
+        ``H_pred`` the Hessian of the (convex) head in the prediction. PSD by
+        construction whenever the head is convex in the prediction — FedNew's
+        regularized subproblem ``(H + (alpha+rho)I)^{-1}`` stays SPD at any
+        iterate (PSD pinned in tests/test_lm_workload.py). Requires both
+        ``predict_fn(params, batch) -> z`` (any pytree of predictions) and
+        ``pred_loss_fn(params, z, batch) -> scalar`` (``params`` enters only
+        through pieces GN treats as constant, e.g. a tied readout).
+
+    ``anchors`` is a *per-client* param pytree (leading client axis on every
+    leaf): the Hessian-refresh staleness contract of the flat layout,
+    verbatim.
 
     No ``local_hessian`` is provided — a (d, d) block cannot exist at model
     scale; dense-path solvers must check :attr:`Objective.has_hessian`.
     """
+    if hvp not in ("exact", "gauss_newton"):
+        raise ValueError(
+            f"hvp must be 'exact' or 'gauss_newton', got {hvp!r}"
+        )
+    if hvp == "gauss_newton" and (predict_fn is None or pred_loss_fn is None):
+        raise ValueError(
+            "hvp='gauss_newton' requires both predict_fn (the backbone cut) "
+            "and pred_loss_fn (the convex head)"
+        )
     grad1 = jax.grad(loss_fn)
 
     def local_loss(x, data):
@@ -265,12 +294,28 @@ def from_loss_fn(loss_fn: Callable) -> Objective:
     def local_grad(x, data):
         return jax.vmap(lambda b: grad1(x, b))(data.batch)
 
-    def local_hvp(anchors, data, v):
-        def one(anchor, b, vi):
+    if hvp == "gauss_newton":
+
+        def one_hvp(anchor, b, vi):
+            f = lambda p: predict_fn(p, b)
+            # Forward: predictions z and the Jacobian push-forward J v.
+            z, Jv = jax.jvp(f, (anchor,), (vi,))
+            # Head curvature in the prediction: H_pred (J v), via jvp of
+            # the head's prediction-gradient (params held at the anchor).
+            gz = jax.grad(lambda zz: pred_loss_fn(anchor, zz, b))
+            _, HJv = jax.jvp(gz, (z,), (Jv,))
+            # Pull back through the backbone: J^T (H_pred J v).
+            _, pullback = jax.vjp(f, anchor)
+            return pullback(HJv)[0]
+
+    else:
+
+        def one_hvp(anchor, b, vi):
             _, tangent = jax.jvp(lambda p: grad1(p, b), (anchor,), (vi,))
             return tangent
 
-        return jax.vmap(one)(anchors, data.batch, v)
+    def local_hvp(anchors, data, v):
+        return jax.vmap(one_hvp)(anchors, data.batch, v)
 
     return Objective(
         local_loss=local_loss, local_grad=local_grad, local_hvp=local_hvp

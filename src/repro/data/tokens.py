@@ -19,7 +19,9 @@ from repro.models.lm import S_text
 
 def _markov_tokens(rng: np.random.Generator, batch: int, seq: int, vocab: int):
     """Cheap structured stream: tokens follow x_{t+1} = (a x_t + b + noise) % V
-    on a per-row basis — learnable short-range structure."""
+    on a per-row basis — learnable short-range structure. Returns the stream
+    plus each row's multiplier ``a`` (the row's "document topic": rows sharing
+    a multiplier share transition statistics)."""
     a = rng.integers(2, 7, size=(batch, 1))
     b = rng.integers(0, vocab, size=(batch, 1))
     x = np.empty((batch, seq + 1), np.int64)
@@ -27,14 +29,16 @@ def _markov_tokens(rng: np.random.Generator, batch: int, seq: int, vocab: int):
     noise = rng.integers(0, 3, size=(batch, seq))
     for t in range(seq):
         x[:, t + 1] = (a[:, 0] * x[:, t] + b[:, 0] + noise[:, t]) % vocab
-    return x
+    return x, a[:, 0] - 2
 
 
-def make_batch(cfg: ModelConfig, shape: InputShape, seed: int, step: int = 0) -> dict:
+def _global_batch(cfg: ModelConfig, shape: InputShape, seed: int, step: int):
+    """The seeded global batch plus each row's topic id (B,). One RNG stream
+    — byte-identical to what make_batch always produced."""
     rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
     B = shape.global_batch
     S = S_text(cfg, shape.seq_len)
-    stream = _markov_tokens(rng, B, S, cfg.vocab_size)
+    stream, topics = _markov_tokens(rng, B, S, cfg.vocab_size)
     batch = {
         "tokens": jnp.asarray(stream[:, :-1], jnp.int32),
         "targets": jnp.asarray(stream[:, 1:], jnp.int32),
@@ -50,16 +54,82 @@ def make_batch(cfg: ModelConfig, shape: InputShape, seed: int, step: int = 0) ->
             rng.standard_normal((B, cfg.encoder_seq, cfg.d_model), np.float32),
             jnp.dtype(cfg.activation_dtype),
         )
+    return batch, topics
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, seed: int, step: int = 0) -> dict:
+    batch, _ = _global_batch(cfg, shape, seed, step)
     return batch
 
 
-def client_batches(cfg: ModelConfig, shape: InputShape, n_clients: int, seed: int, step: int = 0) -> dict:
+def dirichlet_assignment(
+    topics: np.ndarray, n_clients: int, alpha: float,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Capacity-constrained Dirichlet document deal — the token-stream mirror
+    of ``synthetic.make_dirichlet_dataset``'s label skew.
+
+    Client i draws topic proportions p_i ~ Dir(alpha, ..., alpha) over the
+    distinct topics, then fills its B/n slots by sampling a topic from p_i
+    (renormalized over topics with rows left) and popping a row from that
+    topic's shuffled pool. The pools partition ``arange(B)`` and every pop
+    removes, so the returned (B,) index vector is a PERMUTATION: every row
+    is assigned to exactly one client (pinned in tests). Small ``alpha``
+    gives near-single-topic clients; large ``alpha`` recovers the IID mix.
+    Deterministic given ``rng``'s state.
+    """
+    if alpha <= 0:
+        raise ValueError(f"dirichlet alpha must be positive, got {alpha}")
+    topics = np.asarray(topics)
+    B = topics.shape[0]
+    if B % n_clients:
+        raise ValueError(f"batch {B} not divisible by n_clients {n_clients}")
+    per = B // n_clients
+    t_ids = np.unique(topics)
+    pools = [list(rng.permutation(np.flatnonzero(topics == t)))
+             for t in t_ids]
+    props = rng.dirichlet(np.full(len(t_ids), float(alpha)), size=n_clients)
+    perm = np.empty(B, np.int64)
+    pos = 0
+    for i in range(n_clients):
+        for _ in range(per):
+            avail = np.array([len(p) for p in pools], np.float64)
+            w = props[i] * (avail > 0)
+            if w.sum() == 0.0:
+                # every topic this client prefers is exhausted — fall back
+                # to whatever rows remain, proportional to pool size
+                w = avail
+            w = w / w.sum()
+            t = rng.choice(len(pools), p=w)
+            perm[pos] = pools[t].pop()
+            pos += 1
+    return perm
+
+
+def client_batches(
+    cfg: ModelConfig, shape: InputShape, n_clients: int, seed: int,
+    step: int = 0, scheme: str = "iid", alpha: float = 0.5,
+) -> dict:
     """Batch with a leading client axis: each client gets a distinct slice of
-    the global batch (heterogeneous streams per client)."""
-    batch = make_batch(cfg, shape, seed, step)
+    the global batch (heterogeneous streams per client).
+
+    ``scheme="iid"`` is the original contiguous split (byte-identical to
+    before the scheme knob existed). ``scheme="dirichlet"`` reorders the SAME
+    global rows by :func:`dirichlet_assignment` before splitting — document
+    topic skew per client, every sequence still assigned exactly once."""
+    batch, topics = _global_batch(cfg, shape, seed, step)
     B = shape.global_batch
     assert B % n_clients == 0, (B, n_clients)
     per = B // n_clients
+
+    if scheme == "dirichlet":
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, step, 0x7091C])
+        )
+        perm = dirichlet_assignment(topics, n_clients, alpha, rng)
+        batch = jax.tree.map(lambda a: jnp.take(a, perm, axis=0), batch)
+    elif scheme != "iid":
+        raise ValueError(f"unknown partition scheme {scheme!r}")
 
     def split(a):
         return a.reshape(n_clients, per, *a.shape[1:])

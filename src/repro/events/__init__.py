@@ -1,0 +1,27 @@
+"""repro.events — the event-driven federated runtime.
+
+Three layers (see docs/events.md):
+
+  * :mod:`repro.events.population` + ``runtime.CohortCache`` — streamed
+    cohorts with O(sampled) memory: client data AND solver state are pure
+    functions of ``(seed, client_id, last_sync_round)``, materialized only
+    for the dispatched cohort, spilled through ``repro.checkpoint`` past a
+    configurable cache.
+  * :mod:`repro.events.arrivals` + :mod:`repro.events.sim` — a deterministic
+    event heap over client arrival traces (Poisson / trace replay /
+    closed-loop), pricing the repo's exact bit ledgers into simulated
+    seconds with per-client compute/link speeds, dropouts, and re-connects.
+  * :mod:`repro.events.fedbuff` — buffered-asynchronous FedNew
+    (``fednew-async`` in the solver registry): the server applies a
+    staleness-weighted Newton/ADMM step once K updates are buffered, and
+    degenerates bit-exactly to synchronous FedNew at buffer size 0.
+
+:mod:`repro.events.runtime` glues them together; ``repro.api`` exposes the
+whole thing as ``ScheduleSpec(mode="events")`` + ``ArrivalSpec``.
+"""
+
+from repro.events import arrivals, fedbuff, population, runtime, sim  # noqa: F401
+from repro.events.arrivals import ARRIVAL_KINDS, ArrivalTrace, poisson_trace  # noqa: F401
+from repro.events.fedbuff import FedNewAsyncConfig  # noqa: F401
+from repro.events.population import Population, PopulationSpec, make_population  # noqa: F401
+from repro.events.sim import ClientFleet, EventSim, build_fleet, service_time_s  # noqa: F401

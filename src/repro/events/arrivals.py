@@ -1,0 +1,130 @@
+"""Client arrival processes for the event-driven simulator.
+
+An :class:`ArrivalTrace` is the ground truth the simulator consumes: a
+time-sorted sequence of ``(t_arrive_s, client_id)`` pairs, each meaning
+"client ``client_id`` becomes available at simulated second ``t``". Three
+ways to get one:
+
+  * ``closed_loop`` — no trace at all: the server drives a round-robin
+    cohort schedule itself (the synchronous barrier mode; this is the
+    degeneracy limb the sync/async boundary test pins).
+  * ``poisson_trace`` — exponential inter-arrival gaps at a fleet-wide rate
+    with uniformly-drawn client ids; the classic open-loop model.
+  * ``load_trace`` / ``from_rows`` — replay a recorded trace (rows of
+    ``t_s client_id``), so real-world arrival data plugs straight in.
+
+Everything is host-side numpy, deterministic per seed, and validated once at
+construction (sortedness, id range) so the event loop never re-checks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+ARRIVAL_KINDS = ("closed_loop", "poisson", "trace")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    """Time-sorted client arrivals. ``times_s[k]`` is when ``client_ids[k]``
+    becomes available; a client may appear many times (re-connects)."""
+
+    times_s: np.ndarray  # (k,) float64, non-decreasing
+    client_ids: np.ndarray  # (k,) int64 in [0, n_clients)
+    n_clients: int
+
+    def __post_init__(self):
+        t = np.asarray(self.times_s, np.float64)
+        c = np.asarray(self.client_ids, np.int64)
+        object.__setattr__(self, "times_s", t)
+        object.__setattr__(self, "client_ids", c)
+        if t.shape != c.shape or t.ndim != 1:
+            raise ValueError(
+                f"times_s {t.shape} and client_ids {c.shape} must be "
+                "matching 1-D arrays"
+            )
+        if t.size and np.any(np.diff(t) < 0):
+            raise ValueError("arrival times must be non-decreasing")
+        if t.size and np.any(t < 0):
+            raise ValueError("arrival times must be non-negative")
+        if c.size and (c.min() < 0 or c.max() >= self.n_clients):
+            raise ValueError(
+                f"client ids must lie in [0, {self.n_clients}); got range "
+                f"[{c.min()}, {c.max()}]"
+            )
+
+    @property
+    def n_events(self) -> int:
+        return int(self.times_s.size)
+
+
+def poisson_trace(
+    n_clients: int,
+    rate_per_s: float,
+    horizon_s: float,
+    seed: int = 0,
+) -> ArrivalTrace:
+    """Open-loop Poisson arrivals: fleet-wide exponential gaps at
+    ``rate_per_s``, ids uniform over the fleet. Deterministic per seed
+    (``np.random.default_rng`` — same law family as ``netsim.build_links``).
+    """
+    if rate_per_s <= 0:
+        raise ValueError(f"rate_per_s must be positive, got {rate_per_s}")
+    if horizon_s <= 0:
+        raise ValueError(f"horizon_s must be positive, got {horizon_s}")
+    rng = np.random.default_rng(seed)
+    # Draw enough gaps to overshoot the horizon whp, then trim.
+    n_draw = max(16, int(rate_per_s * horizon_s * 1.5) + 8)
+    times: list[np.ndarray] = []
+    t_last = 0.0
+    while True:
+        gaps = rng.exponential(1.0 / rate_per_s, size=n_draw)
+        t = t_last + np.cumsum(gaps)
+        times.append(t)
+        t_last = float(t[-1])
+        if t_last > horizon_s:
+            break
+    all_t = np.concatenate(times)
+    all_t = all_t[all_t <= horizon_s]
+    ids = rng.integers(0, n_clients, size=all_t.size, dtype=np.int64)
+    return ArrivalTrace(times_s=all_t, client_ids=ids, n_clients=n_clients)
+
+
+def from_rows(
+    rows: Sequence[Tuple[float, int]], n_clients: int
+) -> ArrivalTrace:
+    """Build a trace from ``(t_s, client_id)`` rows (sorted by time here, so
+    callers can hand over unordered logs)."""
+    if len(rows) == 0:
+        return ArrivalTrace(
+            times_s=np.zeros((0,)), client_ids=np.zeros((0,), np.int64),
+            n_clients=n_clients,
+        )
+    arr = np.asarray(rows, np.float64)
+    order = np.argsort(arr[:, 0], kind="stable")
+    return ArrivalTrace(
+        times_s=arr[order, 0],
+        client_ids=arr[order, 1].astype(np.int64),
+        n_clients=n_clients,
+    )
+
+
+def load_trace(path: str, n_clients: int) -> ArrivalTrace:
+    """Replay a recorded trace file: whitespace-separated ``t_s client_id``
+    per line, ``#`` comments allowed."""
+    rows = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            body = line.split("#", 1)[0].strip()
+            if not body:
+                continue
+            parts = body.split()
+            if len(parts) != 2:
+                raise ValueError(
+                    f"{path}:{ln}: expected 't_s client_id', got {body!r}"
+                )
+            rows.append((float(parts[0]), int(parts[1])))
+    return from_rows(rows, n_clients)

@@ -1,0 +1,160 @@
+"""Million-client populations with O(sampled) materialization.
+
+``data/synthetic.make_dataset`` draws every client from ONE key, so client
+i's features depend on ``n_clients`` (the split shapes change) — you cannot
+materialize a cohort without generating the whole fleet. This module defines
+a *per-client decomposable* law with the same LibSVM-like geometry:
+
+  * fleet-shared structure (ground-truth ``w_true``, per-feature ``scales``)
+    comes from the base seed alone;
+  * client i's features/labels come from ``jax.random.fold_in(key, i)`` —
+    a pure function of ``(seed, client_id)``, independent of ``n_clients``.
+
+So ``materialize(ids)`` costs O(|ids| * m * d) regardless of the population
+size, and ``materialize(arange(n))`` equals per-row materialization exactly
+(pinned in tests). This is the data half of the streamed-cohort memory
+contract (docs/events.md); the state half lives in ``runtime.CohortCache``.
+
+Per-client *solver* state is re-derived the same way: a client that has
+never been touched since ``last_sync_round`` has exactly its init-time state
+(zero duals, zero codec state), so the cache only ever stores rows that
+actually diverged from the law.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objectives import ClientDataset
+
+# fold_in tag for the fleet-shared w_true draw; client ids are < 2^31 so
+# this can never collide with a client stream.
+_W_TRUE_TAG = 2**32 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """Shape/statistics of a streamed population (mirrors DatasetSpec knobs
+    that survive per-client decomposition)."""
+
+    n_clients: int
+    samples_per_client: int
+    dim: int
+    seed: int = 0
+    heterogeneity: float = 1.0
+    separation: float = 2.0
+    noise: float = 0.5
+    col_spread: float = 0.7
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        if self.samples_per_client < 1 or self.dim < 1:
+            raise ValueError("samples_per_client and dim must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """A lazily-materializable client fleet. Never holds fleet-sized arrays:
+    only the (d,)-sized shared structure lives on the object."""
+
+    spec: PopulationSpec
+    w_true: jax.Array  # (d,) shared ground truth
+    scales: jax.Array  # (d,) shared feature conditioning
+
+    @property
+    def n_clients(self) -> int:
+        return self.spec.n_clients
+
+    @property
+    def dim(self) -> int:
+        return self.spec.dim
+
+    def materialize(self, ids) -> ClientDataset:
+        """The datasets of exactly these clients, O(|ids|) time and memory.
+        Client i's rows are a pure function of ``(seed, i)`` — the same ids
+        produce byte-identical data in any order, any cohort, any fleet
+        size."""
+        ids = jnp.asarray(ids, jnp.int32)
+        if ids.ndim != 1:
+            raise ValueError(f"ids must be a 1-D id vector, got {ids.shape}")
+        feats, labels = _materialize_rows(
+            ids,
+            self.spec.seed,
+            self.spec.samples_per_client,
+            self.spec.dim,
+            self.spec.heterogeneity,
+            self.spec.separation,
+            self.spec.noise,
+            self.spec.col_spread,
+        )
+        return ClientDataset(features=feats, labels=labels)
+
+    def materialize_all(self) -> ClientDataset:
+        """The whole fleet at once — ONLY for small-n tests and the sync
+        cross-checks; defeats the purpose at scale."""
+        return self.materialize(np.arange(self.n_clients))
+
+
+def make_population(spec: PopulationSpec, dtype=jnp.float32) -> Population:
+    """Build the fleet-shared structure (O(d) memory). ``w_true`` and
+    ``scales`` reuse synthetic.make_dataset's law so the logreg optimum has
+    the same conditioning story; they depend only on the base seed."""
+    key = jax.random.PRNGKey(spec.seed)
+    scales = jnp.logspace(0.0, spec.col_spread, spec.dim, dtype=dtype)
+    w_true = (
+        spec.separation
+        * jax.random.normal(
+            jax.random.fold_in(key, _W_TRUE_TAG), (spec.dim,), dtype
+        )
+        / scales
+    )
+    return Population(spec=spec, w_true=w_true, scales=scales)
+
+
+def _client_rows(cid, seed, m, d, heterogeneity, separation, noise_t, spread):
+    """One client's (m, d) features and (m,) labels from fold_in(seed, cid).
+    Mirrors make_dataset's dense branch: anchor-shifted unit features times
+    the shared scales, labels from the shared w_true with logistic noise."""
+    dtype = jnp.float32
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), cid)
+    k_anchor, k_feat, k_noise = jax.random.split(k, 3)
+    anchor = (
+        heterogeneity * jax.random.normal(k_anchor, (1, d), dtype)
+        / jnp.sqrt(jnp.asarray(d, dtype))
+    )
+    feats = (
+        jax.random.normal(k_feat, (m, d), dtype)
+        / jnp.sqrt(jnp.asarray(d, dtype))
+        + anchor
+    )
+    scales = jnp.logspace(0.0, spread, d, dtype=dtype)
+    feats = feats * scales
+    w_true = (
+        separation
+        * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), _W_TRUE_TAG),
+            (d,), dtype,
+        )
+        / scales
+    )
+    logits = feats @ w_true
+    noise = jax.random.logistic(k_noise, (m,), dtype) * noise_t
+    labels = jnp.where(logits + noise > 0, 1.0, -1.0).astype(dtype)
+    return feats, labels
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _materialize_rows(ids, seed, m, d, heterogeneity, separation, noise_t, spread):
+    return jax.vmap(
+        lambda cid: _client_rows(
+            cid, seed, m, d, heterogeneity, separation, noise_t, spread
+        )
+    )(ids)

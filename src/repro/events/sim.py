@@ -1,0 +1,176 @@
+"""Deterministic event heap + fleet model for the event-driven runtime.
+
+This extends ``comm/netsim.py`` from "max over the cohort per round" to a
+genuine discrete-event simulation: each dispatched client occupies the
+simulated timeline for
+
+    service_time_s(i) = down_bits / downlink_bps[i]
+                      + up_bits / uplink_bps[i]
+                      + 2 * latency_s[i]
+                      + compute_s[i]
+
+— the EXACT ``netsim.round_time_s`` per-client expression (same terms, same
+order; bit-exactness of the zero-compute degeneracy is pinned in tests) plus
+a per-client compute term, priced from the same exact PR-5/PR-6 bit ledgers.
+
+The heap is a plain ``heapq`` over ``(time_s, seq, kind, payload)`` tuples:
+``seq`` is a monotone tiebreaker, so identical timestamps pop in push order
+and the whole simulation is a pure function of its inputs — no wall clock,
+no global RNG. Dropouts are seeded per-dispatch Bernoulli draws
+(``default_rng(seed)`` like ``netsim.build_links``): a dropped client's
+upload never completes, and it rejoins only at its next arrival/dispatch
+(re-connects are just later trace entries or the closed-loop round-robin
+coming back around).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.comm import netsim
+
+# Event kinds, in deliberate pop-order priority for equal timestamps: an
+# arrival at time t is seen before a completion at time t only if it was
+# pushed first — the seq tiebreaker keeps this deterministic either way.
+ARRIVE = "arrive"  # a client becomes available (trace-driven modes)
+COMPLETE = "complete"  # a dispatched client's upload lands at the server
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientFleet:
+    """Per-client link AND compute speeds. Links come straight from
+    ``netsim.build_links`` (same heterogeneity law, same seeds); compute is
+    seconds per local Newton solve, with its own lognormal tail."""
+
+    links: netsim.ClientLinks
+    compute_s: np.ndarray  # (n,) seconds per local update
+
+    def __post_init__(self):
+        c = np.asarray(self.compute_s, np.float64)
+        object.__setattr__(self, "compute_s", c)
+        if c.shape != (self.links.n_clients,):
+            raise ValueError(
+                f"compute_s must be ({self.links.n_clients},), got {c.shape}"
+            )
+        if np.any(c < 0):
+            raise ValueError("compute_s must be non-negative")
+
+    @property
+    def n_clients(self) -> int:
+        return self.links.n_clients
+
+
+def build_fleet(
+    n_clients: int,
+    *,
+    uplink_mbps: float,
+    downlink_mbps: float,
+    latency_s: float,
+    compute_s: float = 0.0,
+    heterogeneity: str = "none",
+    sigma: float = 0.0,
+    seed: int = 0,
+) -> ClientFleet:
+    """Fleet = netsim links + a compute draw. The links reuse
+    ``netsim.build_links`` VERBATIM (same seed -> identical links as the
+    synchronous simulator — the boundary test depends on this); compute gets
+    an independent unit-mean lognormal from ``seed + 1`` so enabling it
+    never perturbs the link draws."""
+    links = netsim.build_links(
+        n_clients,
+        uplink_mbps=uplink_mbps,
+        downlink_mbps=downlink_mbps,
+        latency_s=latency_s,
+        heterogeneity=heterogeneity,
+        sigma=sigma,
+        seed=seed,
+    )
+    comp = np.full(n_clients, compute_s, dtype=np.float64)
+    if heterogeneity == "lognormal" and sigma > 0 and compute_s > 0:
+        rng = np.random.default_rng(seed + 1)
+        comp = comp * rng.lognormal(
+            mean=-0.5 * sigma * sigma, sigma=sigma, size=n_clients
+        )
+    return ClientFleet(links=links, compute_s=comp)
+
+
+def service_time_s(
+    fleet: ClientFleet, cid: int, uplink_bits: int, downlink_bits: int
+) -> float:
+    """One client's dispatch->upload-landed duration. Term order matches
+    ``netsim.round_time_s`` exactly so that compute_s == 0 reproduces the
+    synchronous per-client time bit-for-bit (x + 0.0 == x in IEEE754 for
+    finite x)."""
+    if uplink_bits < 0 or downlink_bits < 0:
+        raise ValueError("bit counts must be non-negative")
+    links = fleet.links
+    return float(
+        downlink_bits / links.downlink_bps[cid]
+        + uplink_bits / links.uplink_bps[cid]
+        + 2.0 * links.latency_s[cid]
+        + fleet.compute_s[cid]
+    )
+
+
+@dataclasses.dataclass
+class EventSim:
+    """The deterministic heap. Use :meth:`push` / :meth:`pop`; ``now_s``
+    advances monotonically with every pop (simulated time never rewinds)."""
+
+    dropout_prob: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError(
+                f"dropout_prob must be in [0, 1), got {self.dropout_prob}"
+            )
+        self._heap: List[Tuple[float, int, str, Any]] = []
+        self._seq = 0
+        self._rng = np.random.default_rng(self.seed)
+        self.now_s = 0.0
+        self.n_dropped = 0
+
+    def push(self, t_s: float, kind: str, payload: Any) -> None:
+        if t_s < self.now_s:
+            raise ValueError(
+                f"cannot schedule into the past: t={t_s} < now={self.now_s}"
+            )
+        heapq.heappush(self._heap, (float(t_s), self._seq, kind, payload))
+        self._seq += 1
+
+    def pop(self) -> Optional[Tuple[float, str, Any]]:
+        if not self._heap:
+            return None
+        t, _, kind, payload = heapq.heappop(self._heap)
+        self.now_s = t
+        return t, kind, payload
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def dispatch(
+        self,
+        fleet: ClientFleet,
+        cid: int,
+        uplink_bits: int,
+        downlink_bits: int,
+        payload: Any,
+    ) -> bool:
+        """Charge a client's full service time and schedule its COMPLETE
+        event — unless the seeded dropout coin lands: then nothing is
+        scheduled (the upload is lost; the bits were still SPENT, which the
+        runtime's ledger reflects). Returns whether the dispatch survived.
+        With dropout_prob == 0 the RNG is never consulted, so dropout-free
+        simulations are unaffected by the seed."""
+        if self.dropout_prob > 0.0:
+            if self._rng.random() < self.dropout_prob:
+                self.n_dropped += 1
+                return False
+        dt = service_time_s(fleet, cid, uplink_bits, downlink_bits)
+        self.push(self.now_s + dt, COMPLETE, payload)
+        return True

@@ -102,6 +102,22 @@ CASES: Tuple[Case, ...] = (
         host_exact=False,
         rtol=1e-3,  # top-k ties can resolve differently on eps-different y
     ),
+    Case(
+        "fednew-async",
+        "fednew-async",
+        {**FEDNEW_HP, "buffer_size": 4},
+        host_exact=False,
+        rtol=1e-4,
+    ),
+    Case(
+        "fednew-async-sync",
+        "fednew-async",
+        # buffer_size=0 degenerates to literally fednew.solver — this case
+        # proves the degenerate limb holds the full battery too.
+        {**FEDNEW_HP, "buffer_size": 0},
+        host_exact=False,
+        rtol=1e-4,
+    ),
     Case("fednl", "fednl"),
     Case(
         "fednl-quant",

@@ -107,3 +107,121 @@ def test_build_dataset_dirichlet_and_custom_shapes():
                           n_clients=6, samples_per_client=20, dim=12, seed=1),
     )
     assert d.features.shape == (6, 20, 12)
+
+
+# ---------------------------------------------------------------------------
+# satellite: Dirichlet document-skew token partitions
+# ---------------------------------------------------------------------------
+
+
+def _token_setup():
+    from repro.configs import registry
+    from repro.configs.base import InputShape
+
+    cfg = registry.get_config("gemma3-4b").reduced(n_layers=1, d_model=16)
+    shape = InputShape(name="fed_tokens", seq_len=16, global_batch=24,
+                       kind="train")
+    return cfg, shape
+
+
+def test_tokens_iid_scheme_unchanged_for_old_callers():
+    """scheme='iid' (the default) is byte-identical to the pre-knob split:
+    make_batch reshaped into contiguous client slices."""
+    from repro.data import tokens
+
+    cfg, shape = _token_setup()
+    split = tokens.client_batches(cfg, shape, n_clients=4, seed=3)
+    raw = tokens.make_batch(cfg, shape, 3, 0)
+    for k, v in raw.items():
+        want = np.asarray(v).reshape(4, 6, *np.asarray(v).shape[1:])
+        np.testing.assert_array_equal(np.asarray(split[k]), want)
+
+
+def test_tokens_dirichlet_every_sequence_assigned_exactly_once():
+    """The document deal is a permutation: every global sequence appears in
+    exactly one client's shard, none duplicated, none dropped."""
+    from repro.data import tokens
+
+    cfg, shape = _token_setup()
+    raw = tokens.make_batch(cfg, shape, 7, 0)
+    skew = tokens.client_batches(cfg, shape, n_clients=4, seed=7,
+                                 scheme="dirichlet", alpha=0.2)
+    B = shape.global_batch
+    raw_rows = np.asarray(raw["tokens"])
+    got_rows = np.asarray(skew["tokens"]).reshape(B, -1)
+    # match each dealt row back to its unique source row
+    matched = []
+    for r in got_rows:
+        hits = np.flatnonzero((raw_rows == r).all(axis=1))
+        assert hits.size == 1
+        matched.append(int(hits[0]))
+    assert sorted(matched) == list(range(B))
+    # targets/loss_mask ride the same permutation
+    np.testing.assert_array_equal(
+        np.asarray(skew["targets"]).reshape(B, -1),
+        np.asarray(raw["targets"])[np.asarray(matched)],
+    )
+
+
+def test_tokens_dirichlet_seed_deterministic():
+    from repro.data import tokens
+
+    cfg, shape = _token_setup()
+    a = tokens.client_batches(cfg, shape, n_clients=4, seed=11,
+                              scheme="dirichlet", alpha=0.3)
+    b = tokens.client_batches(cfg, shape, n_clients=4, seed=11,
+                              scheme="dirichlet", alpha=0.3)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = tokens.client_batches(cfg, shape, n_clients=4, seed=12,
+                              scheme="dirichlet", alpha=0.3)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+def test_tokens_dirichlet_alpha_controls_topic_skew():
+    """Small alpha concentrates each client on few topics; the assignment
+    law itself is checked (the deal is what the satellite adds)."""
+    from repro.data import tokens
+
+    rng = lambda: np.random.default_rng(0)
+    topics = np.repeat(np.arange(5), 40)  # 200 docs, 5 topics
+
+    def mean_max_share(alpha):
+        perm = tokens.dirichlet_assignment(topics, 10, alpha, rng())
+        assert sorted(perm.tolist()) == list(range(200))
+        shares = []
+        for i in range(10):
+            t = topics[perm[i * 20:(i + 1) * 20]]
+            shares.append(max(np.bincount(t, minlength=5)) / 20.0)
+        return float(np.mean(shares))
+
+    assert mean_max_share(0.05) > mean_max_share(100.0) + 0.2
+
+
+def test_tokens_dirichlet_rejects_bad_inputs():
+    from repro.data import tokens
+
+    cfg, shape = _token_setup()
+    with pytest.raises(ValueError, match="alpha"):
+        tokens.dirichlet_assignment(np.zeros(8, np.int64), 4, 0.0,
+                                    np.random.default_rng(0))
+    with pytest.raises(ValueError, match="scheme"):
+        tokens.client_batches(cfg, shape, n_clients=4, seed=0,
+                              scheme="sorted")
+
+
+def test_tokens_partition_spec_accepts_dirichlet():
+    """PartitionSpec(dataset='tokens', scheme='dirichlet') builds (the old
+    tokens-rejects-dirichlet guard is gone)."""
+    from repro import api as api_mod
+
+    spec = api_mod.ObjectiveSpec(kind="model", arch="gemma3-4b", seq_len=8,
+                                 layers=1, d_model=16)
+    ds = api_mod.build_dataset(
+        spec,
+        api_mod.PartitionSpec(dataset="tokens", n_clients=2,
+                              samples_per_client=2, seed=0,
+                              scheme="dirichlet", alpha=0.3),
+    )
+    assert ds.n_clients == 2

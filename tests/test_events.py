@@ -1,0 +1,501 @@
+"""repro.events: streamed cohorts, the event heap, and buffered-async FedNew.
+
+The load-bearing pins:
+
+  * **sync degeneracy** — ``fednew-async`` at ``buffer_size=0`` IS fednew
+    (the registry factory returns the fednew solver verbatim), bit-exact
+    through ``engine.run``; and the events barrier schedule at
+    cohort == n / zero compute / full participation reproduces the engine
+    host loop AND ``comm.netsim.simulate_rounds`` bit for bit through
+    ``repro.api.run`` (satellite: the boundary property test).
+  * **O(sampled) memory** — ``peak_state_bytes`` of a streamed run is
+    independent of ``n_clients`` (10k vs 100k fleets, same cohort), and the
+    population law materializes per client id, invariant to fleet size.
+  * **spill correctness** — a capacity-starved CohortCache spills through
+    repro.checkpoint and restores transparently: same trajectory as an
+    unbounded cache, with ``n_spills > 0``.
+  * the event heap, arrival traces, and the ArrivalSpec wiring are
+    deterministic and validated.
+"""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conformance as conf
+import repro.api as api
+from repro.core import engine, fednew
+from repro.events import (
+    arrivals,
+    fedbuff,
+    population,
+    runtime,
+    sim,
+)
+
+NET = dict(uplink_mbps=5.0, downlink_mbps=50.0, latency_s=0.01,
+           heterogeneity="lognormal", sigma=0.8, seed=7)
+HP = {"rho": 0.5, "alpha": 0.1, "hessian_period": 1}
+
+
+# ---------------------------------------------------------------------------
+# registry + fedbuff unit law
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_fednew_async():
+    assert "fednew-async" in engine.solver_names()
+
+
+def test_staleness_weights_law():
+    w = np.asarray(fedbuff.staleness_weights(
+        jnp.asarray([0.0, 1.0, 3.0, 8.0]), 0.5
+    ))
+    assert w[0] == 1.0  # fresh updates get exactly unit weight
+    assert np.all(np.diff(w) < 0)  # strictly decreasing in staleness
+    # power 0 disables the weighting entirely
+    w0 = np.asarray(fedbuff.staleness_weights(jnp.asarray([0.0, 5.0]), 0.0))
+    np.testing.assert_array_equal(w0, np.ones(2))
+
+
+def test_buffer_zero_is_literally_fednew():
+    cfg = fedbuff.FedNewAsyncConfig(buffer_size=0, **HP)
+    sol = fedbuff.solver(cfg)
+    ref = fednew.solver(cfg.fednew_config())
+    # the degenerate limb IS the fednew solver (renamed), not a re-
+    # implementation: same state layout, and bit-exact behavior (next test)
+    assert sol.name == "fednew-async(sync)"
+    assert sol.client_fields == ref.client_fields
+
+
+def test_buffer_zero_engine_run_bit_exact_vs_fednew():
+    obj, data = conf.problem()
+    key = jax.random.PRNGKey(3)
+    s_async = engine.get_solver("fednew-async", buffer_size=0, **HP)
+    s_sync = engine.get_solver("fednew", **HP)
+    st_a, m_a = engine.run(s_async, obj, data, 5, key=key, mode="host")
+    st_s, m_s = engine.run(s_sync, obj, data, 5, key=key, mode="host")
+    conf.assert_tree_equal(st_a, st_s, err="state")
+    conf.assert_tree_equal(m_a, m_s, err="metrics")
+
+
+def test_async_ledger_is_fednew_ledger():
+    cfg = fedbuff.FedNewAsyncConfig(buffer_size=4, **HP)
+    led = fedbuff.ledger(cfg)
+    ref = fednew.ledger(cfg.fednew_config())
+    for r in range(4):
+        assert led.uplink(33, 32, r) == ref.uplink(33, 32, r)
+        assert led.downlink(33, 32, r) == ref.downlink(33, 32, r)
+
+
+def test_async_first_flush_matches_sync_round():
+    """K = n closed loop: the FIRST flush aggregates exactly the n version-0
+    dispatches (staleness 0, unit weights) — the same math as one
+    synchronous fednew round. Later flushes legitimately diverge: clients
+    freed while the buffer refills are re-dispatched against the version
+    they can see, which is the asynchrony the mode exists to model."""
+    obj, data = conf.problem()
+    n = data.n_clients
+    rounds = 4
+    s_sync = engine.get_solver("fednew", **HP)
+    _, m_s = engine.run(s_sync, obj, data, rounds,
+                        key=jax.random.PRNGKey(0), mode="host")
+    cfg = fedbuff.FedNewAsyncConfig(buffer_size=n, **HP)
+    fleet = sim.build_fleet(n, uplink_mbps=5.0, downlink_mbps=50.0,
+                            latency_s=0.01)
+    res = runtime.run_events(cfg, obj, data, fleet, server_steps=rounds,
+                             cohort=n, key=jax.random.PRNGKey(0),
+                             eval_cohort=n)
+    np.testing.assert_allclose(
+        res.metrics["loss"][0], float(np.asarray(m_s.loss)[0]),
+        rtol=1e-5, atol=1e-7,
+    )
+    assert res.metrics["staleness_mean"][0] == 0.0
+    assert res.contributors == [n] * rounds
+    # the async trajectory still optimizes
+    assert res.metrics["loss"][-1] < res.metrics["loss"][0]
+
+
+# ---------------------------------------------------------------------------
+# satellite: the boundary property test (events == sync at the degeneracy)
+# ---------------------------------------------------------------------------
+
+
+def _partition():
+    return api.PartitionSpec(dataset="custom", n_clients=8,
+                             samples_per_client=16, dim=12, seed=0)
+
+
+def test_events_barrier_reproduces_sync_run_bit_exact():
+    """Zero latency jitter beyond the link law, zero compute, full
+    participation, buffer = cohort = fleet: the events runtime must
+    reproduce the synchronous runner EXACTLY — losses bit for bit (same jit
+    trace as the engine host loop) and ``simulated_round_s`` equal to
+    ``comm.netsim.simulate_rounds`` (same floats, same order)."""
+    sync = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec("fednew", {"rho": 0.5, "alpha": 0.1}),
+        schedule=api.ScheduleSpec(rounds=6, mode="host"),
+        network=api.NetworkSpec(**NET),
+    )
+    ev = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 0}
+        ),
+        schedule=api.ScheduleSpec(rounds=6, mode="events"),
+        network=api.NetworkSpec(**NET),
+        arrival=api.ArrivalSpec(kind="closed_loop", cohort=8),
+    )
+    r_sync = api.run(sync)
+    r_ev = api.run(ev)
+    assert r_ev.metrics["loss"] == r_sync.metrics["loss"]
+    assert r_ev.metrics["direction_norm"] == r_sync.metrics["direction_norm"]
+    assert r_ev.simulated_round_s == r_sync.simulated_round_s
+    assert r_ev.simulated_time_s == r_sync.simulated_time_s
+    assert r_ev.uplink_bits_total == r_sync.uplink_bits_total
+    assert r_ev.downlink_bits_total == r_sync.downlink_bits_total
+    assert r_ev.sampled_clients == [8] * 6
+
+
+def test_events_compute_term_breaks_degeneracy_monotonically():
+    """Adding compute time can only slow rounds down — the barrier pays it
+    on the slowest client."""
+    base = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 0}
+        ),
+        schedule=api.ScheduleSpec(rounds=3, mode="events"),
+        network=api.NetworkSpec(**NET),
+        arrival=api.ArrivalSpec(kind="closed_loop", cohort=8),
+    )
+    slow = dataclasses.replace(
+        base, arrival=api.ArrivalSpec(kind="closed_loop", cohort=8,
+                                      compute_s=0.5),
+    )
+    r0 = api.run(base)
+    r1 = api.run(slow)
+    assert all(b > a for a, b in
+               zip(r0.simulated_round_s, r1.simulated_round_s))
+    # compute never changes the math, only the clock
+    assert r0.metrics["loss"] == r1.metrics["loss"]
+
+
+# ---------------------------------------------------------------------------
+# population law + the O(sampled) memory contract
+# ---------------------------------------------------------------------------
+
+
+def test_population_rows_are_fleet_size_invariant():
+    ids = np.asarray([0, 3, 17, 41])
+    small = population.make_population(
+        population.PopulationSpec(n_clients=50, samples_per_client=8, dim=6,
+                                  seed=9)
+    )
+    huge = population.make_population(
+        population.PopulationSpec(n_clients=5_000_000, samples_per_client=8,
+                                  dim=6, seed=9)
+    )
+    a = small.materialize(ids)
+    b = huge.materialize(ids)
+    np.testing.assert_array_equal(np.asarray(a.features),
+                                  np.asarray(b.features))
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+def test_population_batch_equals_per_row():
+    pop = population.make_population(
+        population.PopulationSpec(n_clients=100, samples_per_client=4, dim=5,
+                                  seed=2)
+    )
+    ids = np.asarray([7, 99, 0])
+    batch = pop.materialize(ids)
+    for j, cid in enumerate(ids):
+        one = pop.materialize(np.asarray([cid]))
+        np.testing.assert_array_equal(np.asarray(batch.features[j]),
+                                      np.asarray(one.features[0]))
+
+
+def test_population_labels_learnable():
+    pop = population.make_population(
+        population.PopulationSpec(n_clients=32, samples_per_client=64,
+                                  dim=10, seed=0, noise=0.1)
+    )
+    data = pop.materialize_all()
+    # the shared w_true must separate far better than chance
+    logits = np.asarray(data.features) @ np.asarray(pop.w_true)
+    acc = (np.sign(logits) == np.asarray(data.labels)).mean()
+    assert acc > 0.8
+
+
+def _streamed_peak(n_clients: int) -> int:
+    from repro.core import objectives
+
+    pop = population.make_population(
+        population.PopulationSpec(n_clients=n_clients, samples_per_client=8,
+                                  dim=12, seed=1)
+    )
+    fleet = sim.build_fleet(n_clients, uplink_mbps=5.0, downlink_mbps=50.0,
+                            latency_s=0.01)
+    cfg = fedbuff.FedNewAsyncConfig(buffer_size=0, **HP)
+    res = runtime.run_events(
+        cfg, objectives.logistic_regression(1e-3), pop, fleet,
+        server_steps=3, cohort=64, key=jax.random.PRNGKey(0), eval_cohort=32,
+    )
+    assert all(np.isfinite(l) for l in res.metrics["loss"])
+    return res.peak_state_bytes
+
+
+def test_peak_memory_independent_of_fleet_size():
+    """The streamed-cohort acceptance criterion: resident state at
+    n=100_000 is EXACTLY the bytes it is at n=10_000 — nothing fleet-sized
+    is ever held."""
+    assert _streamed_peak(10_000) == _streamed_peak(100_000)
+
+
+def test_spill_preserves_trajectory(tmp_path):
+    """Evicting cold client rows through repro.checkpoint must not change
+    the math: a capacity-starved cache restores spilled duals on re-touch
+    and produces the identical trajectory."""
+    from repro.core import objectives
+
+    pop = population.make_population(
+        population.PopulationSpec(n_clients=96, samples_per_client=8, dim=10,
+                                  seed=4)
+    )
+    fleet = sim.build_fleet(96, uplink_mbps=5.0, downlink_mbps=50.0,
+                            latency_s=0.01)
+    obj = objectives.logistic_regression(1e-3)
+    cfg = fedbuff.FedNewAsyncConfig(buffer_size=0, **HP)
+
+    def go(capacity, spill_dir):
+        return runtime.run_events(
+            cfg, obj, pop, fleet, server_steps=8, cohort=32,
+            key=jax.random.PRNGKey(0), cache_capacity=capacity,
+            checkpoint_dir=spill_dir, eval_cohort=32,
+        )
+
+    big = go(100_000, None)
+    small = go(16, str(tmp_path))
+    assert small.n_spills > 0
+    assert small.metrics["loss"] == big.metrics["loss"]
+    np.testing.assert_array_equal(small.x, big.x)
+
+
+def test_cache_overflow_without_spill_dir_raises():
+    cache = runtime.CohortCache(dim=4, comm_width=1, capacity=2)
+    cache.scatter([0, 1], np.ones((2, 4)), np.zeros((2, 1)), last_sync=0)
+    with pytest.raises(RuntimeError, match="spill_dir"):
+        cache.scatter([2, 3], np.ones((2, 4)), np.zeros((2, 1)), last_sync=1)
+
+
+# ---------------------------------------------------------------------------
+# event heap + arrivals
+# ---------------------------------------------------------------------------
+
+
+def test_event_heap_orders_by_time_then_push_order():
+    es = sim.EventSim()
+    es.push(2.0, sim.ARRIVE, "b")
+    es.push(1.0, sim.ARRIVE, "a")
+    es.push(2.0, sim.ARRIVE, "c")
+    order = [es.pop()[2] for _ in range(3)]
+    assert order == ["a", "b", "c"]
+    assert es.pop() is None
+    with pytest.raises(ValueError, match="past"):
+        es.push(0.5, sim.ARRIVE, "late")
+
+
+def test_service_time_matches_netsim_at_zero_compute():
+    from repro.comm import netsim
+
+    fleet = sim.build_fleet(6, uplink_mbps=3.0, downlink_mbps=30.0,
+                            latency_s=0.02, heterogeneity="lognormal",
+                            sigma=1.0, seed=5)
+    up, down = 12_345, 67_890
+    mask = np.ones(6)
+    per_client = [sim.service_time_s(fleet, i, up, down) for i in range(6)]
+    assert max(per_client) == netsim.round_time_s(fleet.links, up, down, mask)
+
+
+def test_dropout_is_seeded_and_counted():
+    fleet = sim.build_fleet(4, uplink_mbps=5.0, downlink_mbps=50.0,
+                            latency_s=0.01)
+
+    def survivors(seed):
+        es = sim.EventSim(dropout_prob=0.5, seed=seed)
+        return [es.dispatch(fleet, i % 4, 100, 100, i) for i in range(40)]
+
+    a, b = survivors(3), survivors(3)
+    assert a == b  # deterministic per seed
+    assert survivors(4) != a
+    assert 0 < sum(a) < 40
+
+
+def test_poisson_trace_deterministic_and_sorted():
+    t1 = arrivals.poisson_trace(16, rate_per_s=4.0, horizon_s=30.0, seed=2)
+    t2 = arrivals.poisson_trace(16, rate_per_s=4.0, horizon_s=30.0, seed=2)
+    np.testing.assert_array_equal(t1.times_s, t2.times_s)
+    np.testing.assert_array_equal(t1.client_ids, t2.client_ids)
+    assert np.all(np.diff(t1.times_s) >= 0)
+    assert t1.client_ids.min() >= 0 and t1.client_ids.max() < 16
+    t3 = arrivals.poisson_trace(16, rate_per_s=4.0, horizon_s=30.0, seed=3)
+    assert not np.array_equal(t1.times_s, t3.times_s)
+
+
+def test_trace_file_round_trip(tmp_path):
+    p = tmp_path / "arrivals.txt"
+    p.write_text("# t_s client_id\n0.5 3\n0.25 1\n2.0 0\n")
+    tr = arrivals.load_trace(str(p), n_clients=4)
+    np.testing.assert_allclose(tr.times_s, [0.25, 0.5, 2.0])
+    np.testing.assert_array_equal(tr.client_ids, [1, 3, 0])
+    with pytest.raises(ValueError):
+        arrivals.load_trace(str(p), n_clients=2)  # id 3 out of range
+
+
+# ---------------------------------------------------------------------------
+# async end-to-end through the API
+# ---------------------------------------------------------------------------
+
+
+def test_api_async_closed_loop_runs_and_accounts():
+    spec = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 3}
+        ),
+        schedule=api.ScheduleSpec(rounds=5, mode="events"),
+        network=api.NetworkSpec(**NET),
+        arrival=api.ArrivalSpec(kind="closed_loop", cohort=4,
+                                compute_s=0.02),
+    )
+    res = api.run(spec)
+    assert res.rounds == 5
+    assert res.sampled_clients == [3] * 5
+    assert res.metrics["loss"][-1] < res.metrics["loss"][0]
+    assert all(t > 0 for t in res.simulated_round_s)
+    # exact int ledgers: every flush aggregates K uploads of the fednew
+    # payload (identity codec: 32 * d bits each)
+    assert res.uplink_bits_total == [3 * 32 * 12] * 5
+    assert res.peak_state_bytes is not None and res.peak_state_bytes > 0
+    assert res.n_dropped == 0
+
+
+def test_api_async_poisson_trace_with_dropout():
+    spec = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 2}
+        ),
+        schedule=api.ScheduleSpec(rounds=50, mode="events"),
+        network=api.NetworkSpec(**NET),
+        arrival=api.ArrivalSpec(kind="poisson", cohort=4, rate_per_s=5.0,
+                                horizon_s=30.0, dropout_prob=0.3, seed=11),
+    )
+    res = api.run(spec)
+    # the trace is finite: the loop stops when arrivals run dry
+    assert 1 <= res.rounds <= 50
+    assert res.n_dropped > 0
+    assert len(res.simulated_round_s) == res.rounds
+    assert all(c == 2 for c in res.sampled_clients)
+
+
+def test_api_async_compressed_codec():
+    spec = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 3}
+        ),
+        compression=api.CompressionSpec(codec="topk",
+                                        params={"fraction": 0.25}),
+        schedule=api.ScheduleSpec(rounds=4, mode="events"),
+        network=api.NetworkSpec(**NET),
+        arrival=api.ArrivalSpec(kind="closed_loop", cohort=4),
+    )
+    res = api.run(spec)
+    # top-k(0.25) of d=12: k=3 values at 32b + 4b index each
+    per_msg = 3 * (32 + 4)
+    assert res.uplink_bits_total == [3 * per_msg] * 4
+    assert np.isfinite(res.metrics["loss"]).all()
+
+
+# ---------------------------------------------------------------------------
+# spec validation + JSON round trip
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_spec_json_round_trip():
+    spec = api.ExperimentSpec(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 2}
+        ),
+        schedule=api.ScheduleSpec(rounds=3, mode="events"),
+        network=api.NetworkSpec(**NET),
+        arrival=api.ArrivalSpec(kind="poisson", cohort=6, rate_per_s=2.5,
+                                horizon_s=60.0, seed=3),
+    )
+    again = api.ExperimentSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert again.arrival.rate_per_s == 2.5
+
+
+@pytest.mark.parametrize(
+    "mutate,msg",
+    [
+        (dict(network=None), "network"),
+        (dict(solver=api.SolverSpec("fednew", {"rho": 0.5, "alpha": 0.1})),
+         "fednew-async"),
+        (dict(participation=api.ParticipationSpec(fraction=0.5,
+                                                  kind="bernoulli")),
+         "participation"),
+        (dict(solver=api.SolverSpec(
+            "fednew-async",
+            {"rho": 0.5, "alpha": 0.1, "buffer_size": 2,
+             "hessian_period": 2})), "hessian_period"),
+    ],
+)
+def test_events_spec_validation(mutate, msg):
+    base = dict(
+        partition=_partition(),
+        solver=api.SolverSpec(
+            "fednew-async", {"rho": 0.5, "alpha": 0.1, "buffer_size": 2}
+        ),
+        schedule=api.ScheduleSpec(rounds=3, mode="events"),
+        network=api.NetworkSpec(**NET),
+    )
+    base.update(mutate)
+    with pytest.raises(ValueError, match=msg):
+        api.ExperimentSpec(**base)
+
+
+def test_events_schedule_rejects_scan_blocks():
+    with pytest.raises(ValueError, match="block_size"):
+        api.ScheduleSpec(rounds=3, mode="events", block_size=2)
+
+
+def test_arrival_without_events_mode_rejected():
+    with pytest.raises(ValueError, match="events"):
+        api.ExperimentSpec(
+            partition=_partition(),
+            solver=api.SolverSpec("fednew", {"rho": 0.5, "alpha": 0.1}),
+            schedule=api.ScheduleSpec(rounds=3),
+            arrival=api.ArrivalSpec(),
+        )
+
+
+def test_run_events_rejects_stateful_curvature():
+    from repro.core import objectives
+
+    cfg = fedbuff.FedNewAsyncConfig(buffer_size=0, rho=0.5, alpha=0.1,
+                                    hessian_period=2)
+    fleet = sim.build_fleet(8, uplink_mbps=5.0, downlink_mbps=50.0,
+                            latency_s=0.01)
+    obj, data = conf.problem()
+    with pytest.raises(ValueError, match="hessian_period"):
+        runtime.run_events(cfg, obj, data, fleet, server_steps=2, cohort=8)

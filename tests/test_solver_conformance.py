@@ -169,8 +169,8 @@ def _topk_bits(d, word, fraction):
     return k * (word + max(1, (d - 1).bit_length()))
 
 
-_LEDGER_SOLVERS = ["fednew", "q-fednew", "fednl", "fedns", "fagh", "fedgd",
-                   "newton-zero", "newton"]
+_LEDGER_SOLVERS = ["fednew", "fednew-async", "q-fednew", "fednl", "fedns",
+                   "fagh", "fedgd", "newton-zero", "newton"]
 
 
 @settings(max_examples=60, deadline=None)
@@ -190,6 +190,11 @@ def test_ledger_exact_int_invariant(solver, d, word, bits, fraction, sketch,
         hparams["bits"] = bits
     elif solver == "fednew":
         hparams["codec"] = {"name": "topk", "fraction": fraction}
+    elif solver == "fednew-async":
+        # the async solver's accounting is bit-for-bit fednew's: submission
+        # is the transmission, whether or not the round flushes
+        hparams["codec"] = {"name": "topk", "fraction": fraction}
+        hparams["buffer_size"] = 4
     elif solver == "fednl":
         hparams["codec"] = {"name": "stoch_quant", "bits": bits}
     elif solver == "fedns":
@@ -201,7 +206,7 @@ def test_ledger_exact_int_invariant(solver, d, word, bits, fraction, sketch,
     def expect_up(r):
         if solver == "q-fednew":
             return bits * d + 32
-        if solver == "fednew":
+        if solver in ("fednew", "fednew-async"):
             return _topk_bits(d, word, fraction)
         if solver == "fednl":
             base = (bits * d * d + 32) + word * d
