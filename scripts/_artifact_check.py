@@ -1,0 +1,105 @@
+"""Shared primitives for the benchmark-artifact schema checkers.
+
+The four ``check_*_artifact.py`` scripts assert the same three shapes over
+and over — an exact key set, an exact-int ledger value, a monotone series —
+so the shapes live here once. Everything raises ``AssertionError`` (the
+contract both the CI legs and the in-process test callers rely on:
+``pytest`` callers catch it, the CLI wrappers let it propagate for a
+nonzero exit), with the same tuple-style payloads the inline asserts used.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Callable, Iterable, Mapping, Optional, Sequence
+
+
+def fail(*payload: object) -> None:
+    """Raise the checkers' uniform failure type."""
+    raise AssertionError(payload[0] if len(payload) == 1 else payload)
+
+
+def require_keys(
+    mapping: Mapping,
+    keys: Iterable[str],
+    *,
+    label: str = "payload",
+    exact: bool = True,
+) -> None:
+    """Exact key-set match (``exact=True``) or required-key presence."""
+    want = set(keys)
+    have = set(mapping)
+    if exact:
+        if have != want:
+            fail(f"{label} keys mismatch", sorted(have), "expected",
+                 sorted(want))
+    else:
+        missing = want - have
+        if missing:
+            fail(f"{label} missing {sorted(missing)}")
+
+
+def require_int(
+    value: object,
+    label: str,
+    *,
+    minimum: Optional[int] = None,
+) -> int:
+    """Exact Python int (``bool`` excluded — it is an ``int`` subclass but
+    never a ledger value), optionally bounded below."""
+    if not isinstance(value, int) or isinstance(value, bool):
+        fail(f"{label} must stay an exact int", type(value).__name__, value)
+    if minimum is not None and value < minimum:
+        fail(f"{label} must be >= {minimum}", value)
+    return value
+
+
+def require_positive(value, label: str) -> None:
+    if not value > 0:
+        fail(f"{label} must be > 0", value)
+
+
+def require_monotone(
+    seq: Sequence,
+    label: str,
+    *,
+    strict: bool = True,
+) -> None:
+    """Non-decreasing (or strictly increasing) series."""
+    pairs = list(zip(seq, seq[1:]))
+    ok = all(b > a for a, b in pairs) if strict else all(
+        b >= a for a, b in pairs
+    )
+    if not ok:
+        kind = "strictly increase" if strict else "be non-decreasing"
+        fail(f"{label} must {kind}", list(seq))
+
+
+def require_cumulative(
+    increments: Sequence,
+    cumulative: Sequence,
+    label: str,
+) -> None:
+    """``cumulative`` is the exact-int running sum of ``increments``."""
+    if len(increments) != len(cumulative):
+        fail(f"{label}: length mismatch", len(increments), len(cumulative))
+    acc = 0
+    for i, (v, c) in enumerate(zip(increments, cumulative)):
+        acc += v
+        require_int(c, f"{label}[{i}]")
+        if c != acc:
+            fail(f"{label}[{i}] != running sum", c, acc)
+
+
+def run_cli(
+    check_payload: Callable[[dict], None],
+    path: str,
+    ok_message: Callable[[dict], str],
+) -> None:
+    """Shared CLI body: load JSON, check, print the per-artifact OK line.
+    Failures propagate as AssertionError — nonzero exit, same as the
+    original per-script ``main``s."""
+    with open(path) as f:
+        payload = json.load(f)
+    check_payload(payload)
+    print(ok_message(payload))

@@ -10,12 +10,23 @@ floats) plus the event-mode invariants a schema can see — sync/async rows
 at both codecs, a per-step time axis that genuinely VARIES for async (the
 whole point of mode='events'), O(sampled) state accounting present — not
 benchmark outcomes; the full suite enforces the dominance headline itself.
+Shared shape primitives live in scripts/_artifact_check.py.
 """
 
 from __future__ import annotations
 
-import json
 import sys
+
+try:
+    from scripts._artifact_check import (
+        fail, require_int, require_keys, require_monotone, require_positive,
+        run_cli,
+    )
+except ImportError:  # invoked as `python scripts/check_async_artifact.py`
+    from _artifact_check import (
+        fail, require_int, require_keys, require_monotone, require_positive,
+        run_cli,
+    )
 
 _RUN_KEYS = {
     "label", "mode", "buffer_size", "codec", "server_steps",
@@ -31,49 +42,51 @@ _HEADLINE_KEYS = {
 
 def check_payload(payload: dict) -> None:
     """Raise AssertionError if the artifact doesn't match the schema."""
-    assert set(payload) == {"config", "runs", "async_vs_sync"}, sorted(payload)
+    require_keys(payload, {"config", "runs", "async_vs_sync"})
     cfg = payload["config"]
-    for key in ("smoke", "sync_steps", "async_steps", "buffer_size",
-                "cohort", "compute_s", "f_star", "n_clients", "dim",
-                "network"):
-        assert key in cfg, f"config missing {key!r}"
-    assert isinstance(cfg["buffer_size"], int) and cfg["buffer_size"] >= 1
-    assert payload["runs"], "no runs recorded"
+    require_keys(
+        cfg,
+        ("smoke", "sync_steps", "async_steps", "buffer_size", "cohort",
+         "compute_s", "f_star", "n_clients", "dim", "network"),
+        label="config", exact=False,
+    )
+    require_int(cfg["buffer_size"], "config buffer_size", minimum=1)
+    if not payload["runs"]:
+        fail("no runs recorded")
     modes = set()
     for run in payload["runs"]:
-        assert set(run) == _RUN_KEYS, (run.get("label"), sorted(run))
-        assert set(run["frontier"]) == _FRONTIER_KEYS
+        require_keys(run, _RUN_KEYS, label=f"run {run.get('label')!r}")
+        require_keys(run["frontier"], _FRONTIER_KEYS, label="frontier")
         lengths = {len(v) for v in run["frontier"].values()}
-        assert lengths == {run["server_steps"]}, (run["label"], lengths)
-        assert isinstance(run["cumulative_uplink_bits_total"], int), (
-            "uplink ledger must stay an exact int"
-        )
-        assert isinstance(run["peak_state_bytes"], int), (
-            "state accounting must stay an exact int"
-        )
-        assert run["simulated_time_s"] > 0
+        if lengths != {run["server_steps"]}:
+            fail(run["label"], lengths)
+        require_int(run["cumulative_uplink_bits_total"], "uplink ledger")
+        require_int(run["peak_state_bytes"], "state accounting")
+        require_positive(run["simulated_time_s"], "simulated_time_s")
         ts = run["frontier"]["sim_time_s"]
-        assert all(b > a for a, b in zip(ts, ts[1:])), (
-            f"{run['label']}: simulated time must strictly increase"
+        require_monotone(
+            ts, f"{run['label']}: simulated time", strict=True
         )
         if run["mode"] == "async" and run["server_steps"] > 2:
             deltas = {round(b - a, 9) for a, b in zip(ts, ts[1:])}
-            assert len(deltas) > 1, (
-                f"{run['label']}: async step times all identical — the "
-                f"event heap is not actually driving the clock"
-            )
+            if len(deltas) <= 1:
+                fail(
+                    f"{run['label']}: async step times all identical — the "
+                    f"event heap is not actually driving the clock"
+                )
         modes.add(run["mode"])
-    assert modes == {"sync", "async"}, f"frontier needs both modes: {modes}"
+    if modes != {"sync", "async"}:
+        fail(f"frontier needs both modes: {modes}")
     headline = payload["async_vs_sync"]
-    assert set(headline) == _HEADLINE_KEYS, sorted(headline)
-    if not cfg["smoke"]:
-        assert headline["pass"] is True, headline
+    require_keys(headline, _HEADLINE_KEYS, label="async_vs_sync")
+    if not cfg["smoke"] and headline["pass"] is not True:
+        fail(headline)
 
 
 def main(path: str) -> None:
-    with open(path) as f:
-        check_payload(json.load(f))
-    print(f"async_frontier artifact OK: {path}")
+    run_cli(
+        check_payload, path, lambda p: f"async_frontier artifact OK: {path}"
+    )
 
 
 if __name__ == "__main__":

@@ -7,12 +7,21 @@ Used two ways:
 
 Checks structure and exact-ledger typing (bit counts must be ints, not
 floats), not benchmark outcomes — the full suite enforces those itself.
+Shared shape primitives live in scripts/_artifact_check.py.
 """
 
 from __future__ import annotations
 
-import json
 import sys
+
+try:
+    from scripts._artifact_check import (
+        fail, require_int, require_keys, require_positive, run_cli,
+    )
+except ImportError:  # invoked as `python scripts/check_comm_artifact.py`
+    from _artifact_check import (
+        fail, require_int, require_keys, require_positive, run_cli,
+    )
 
 _RUN_KEYS = {
     "label", "codec", "participation", "solver_hparams", "final_rel_gap",
@@ -29,32 +38,33 @@ _HEADLINE_KEYS = {
 
 def check_payload(payload: dict) -> None:
     """Raise AssertionError if the artifact doesn't match the schema."""
-    assert set(payload) == {"config", "runs", "topk_vs_full"}, sorted(payload)
+    require_keys(payload, {"config", "runs", "topk_vs_full"})
     cfg = payload["config"]
-    for key in ("smoke", "rounds", "f_star", "dataset", "dim", "n_clients",
-                "participations", "network"):
-        assert key in cfg, f"config missing {key!r}"
-    assert isinstance(cfg["rounds"], int) and cfg["rounds"] > 0
-    assert payload["runs"], "no runs recorded"
+    require_keys(
+        cfg,
+        ("smoke", "rounds", "f_star", "dataset", "dim", "n_clients",
+         "participations", "network"),
+        label="config", exact=False,
+    )
+    require_int(cfg["rounds"], "config rounds", minimum=1)
+    if not payload["runs"]:
+        fail("no runs recorded")
     for run in payload["runs"]:
-        assert set(run) == _RUN_KEYS, (run.get("label"), sorted(run))
-        assert set(run["frontier"]) == _FRONTIER_KEYS
+        require_keys(run, _RUN_KEYS, label=f"run {run.get('label')!r}")
+        require_keys(run["frontier"], _FRONTIER_KEYS, label="frontier")
         lengths = {len(v) for v in run["frontier"].values()}
-        assert lengths == {cfg["rounds"]}, (run["label"], lengths)
-        assert isinstance(run["cumulative_downlink_bits_total"], int), (
-            "downlink ledger must stay an exact int"
-        )
-        assert run["simulated_time_s"] > 0
+        if lengths != {cfg["rounds"]}:
+            fail(run["label"], lengths)
+        require_int(run["cumulative_downlink_bits_total"], "downlink ledger")
+        require_positive(run["simulated_time_s"], "simulated_time_s")
     headline = payload["topk_vs_full"]
-    assert set(headline) == _HEADLINE_KEYS, sorted(headline)
-    if not cfg["smoke"]:
-        assert headline["pass"] is True, headline
+    require_keys(headline, _HEADLINE_KEYS, label="topk_vs_full")
+    if not cfg["smoke"] and headline["pass"] is not True:
+        fail(headline)
 
 
 def main(path: str) -> None:
-    with open(path) as f:
-        check_payload(json.load(f))
-    print(f"comm_tradeoff artifact OK: {path}")
+    run_cli(check_payload, path, lambda p: f"comm_tradeoff artifact OK: {path}")
 
 
 if __name__ == "__main__":

@@ -7,59 +7,80 @@ param leaf), metric/ledger agreement, and a decreasing loss cannot
 silently rot.
 
     python scripts/check_lm_artifact.py benchmarks/out/lm_tiny_runresult.json
+
+Shared shape primitives live in scripts/_artifact_check.py.
 """
 
 from __future__ import annotations
 
-import json
 import math
 import sys
+
+try:
+    from scripts._artifact_check import (
+        fail, require_cumulative, require_int, run_cli,
+    )
+except ImportError:  # invoked as `python scripts/check_lm_artifact.py`
+    from _artifact_check import (
+        fail, require_cumulative, require_int, run_cli,
+    )
 
 
 def check_payload(payload: dict) -> None:
     """Raise AssertionError if the RunResult doesn't match the contract."""
     spec = payload["spec"]
-    assert spec["objective"]["kind"] == "model", spec["objective"]
-    assert spec["partition"]["dataset"] == "tokens"
+    if spec["objective"]["kind"] != "model":
+        fail(spec["objective"])
+    if spec["partition"]["dataset"] != "tokens":
+        fail(spec["partition"])
     rounds = payload["rounds"]
-    assert rounds == spec["schedule"]["rounds"]
+    if rounds != spec["schedule"]["rounds"]:
+        fail("rounds mismatch", rounds, spec["schedule"]["rounds"])
 
     # dim is the total param count of the registry arch at the spec's
     # reduced size — a pytree run must report it, not a dataset dim.
-    assert isinstance(payload["dim"], int) and payload["dim"] > 0
+    require_int(payload["dim"], "dim", minimum=1)
 
     losses = payload["metrics"]["loss"]
-    assert len(losses) == rounds
-    assert all(math.isfinite(l) for l in losses), losses
-    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+    if len(losses) != rounds:
+        fail("loss length", len(losses), rounds)
+    if not all(math.isfinite(l) for l in losses):
+        fail(losses)
+    if not losses[-1] < losses[0]:
+        fail(f"loss did not decrease: {losses}")
 
     # Exact ledgers: Python ints end to end (never floats), per-leaf sums
     # multiplied by the sampled-client counts, cumulative sums consistent.
     for key in ("uplink_bits_total", "downlink_bits_total"):
         vals = payload[key]
-        assert len(vals) == rounds
-        assert all(isinstance(v, int) for v in vals), (key, vals)
-    acc = 0
-    for v, c in zip(payload["uplink_bits_total"],
-                    payload["cumulative_uplink_bits_total"]):
-        acc += v
-        assert c == acc and isinstance(c, int)
+        if len(vals) != rounds:
+            fail(key, len(vals), rounds)
+        for i, v in enumerate(vals):
+            require_int(v, f"{key}[{i}]")
+    require_cumulative(
+        payload["uplink_bits_total"],
+        payload["cumulative_uplink_bits_total"],
+        "cumulative_uplink_bits_total",
+    )
 
     # The traced in-step metric must agree with the ledger exactly.
     per_client = payload["metrics"]["uplink_bits_per_client"]
     n = payload["n_clients"]
     for traced, total in zip(per_client, payload["uplink_bits_total"]):
-        assert traced == total / n, (traced, total, n)
+        if traced != total / n:
+            fail(traced, total, n)
 
 
 def main() -> None:
-    path = sys.argv[1]
-    with open(path) as f:
-        payload = json.load(f)
-    check_payload(payload)
-    print(f"ok: {path} (dim={payload['dim']}, "
-          f"loss {payload['metrics']['loss'][0]:.3f} -> "
-          f"{payload['metrics']['loss'][-1]:.3f})")
+    run_cli(
+        check_payload,
+        sys.argv[1],
+        lambda p: (
+            f"ok: {sys.argv[1]} (dim={p['dim']}, "
+            f"loss {p['metrics']['loss'][0]:.3f} -> "
+            f"{p['metrics']['loss'][-1]:.3f})"
+        ),
+    )
 
 
 if __name__ == "__main__":

@@ -13,6 +13,17 @@ if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Static-analysis leg (fedlint): enforce the ledger/PRNG/carry/kernel
+# contracts at the AST level over everything CI ships. Exits nonzero on any
+# finding; the JSON report is uploaded as a CI artifact by the workflow.
+# --check-docs also fails the leg if docs/analysis.md and the registered
+# rule set drift apart.
+mkdir -p benchmarks/out
+ANALYSIS=1 python -m repro.analysis src benchmarks examples \
+    --check-docs docs/analysis.md \
+    --format json --out benchmarks/out/fedlint.json
+
 python -m pytest -x -q
 
 # Interpret-mode kernel leg: force the dispatch layer's "auto" onto the

@@ -1,0 +1,42 @@
+"""repro.analysis — fedlint, the repo-specific static invariant checker.
+
+Public surface:
+
+    from repro.analysis import analyze_source, analyze_paths, Finding
+    report = analyze_source(src)
+    report.findings        # tuple[Finding, ...]
+    report.render_json()
+
+Importing the package registers the full rule set (see
+:mod:`repro.analysis.rules`); ``python -m repro.analysis`` and the
+``repro-lint`` console script front the same engine.
+"""
+
+from repro.analysis.engine import (  # noqa: F401
+    Finding,
+    Module,
+    Project,
+    Report,
+    Rule,
+    analyze_modules,
+    analyze_paths,
+    analyze_source,
+    register_rule,
+    registered_rules,
+    rule_ids,
+)
+from repro.analysis import rules as _rules  # noqa: F401 — rule registration
+
+__all__ = [
+    "Finding",
+    "Module",
+    "Project",
+    "Report",
+    "Rule",
+    "analyze_modules",
+    "analyze_paths",
+    "analyze_source",
+    "register_rule",
+    "registered_rules",
+    "rule_ids",
+]

@@ -1,0 +1,9 @@
+"""``python -m repro.analysis [paths...]`` — run fedlint from anywhere the
+package imports."""
+
+import sys
+
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

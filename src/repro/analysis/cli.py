@@ -1,0 +1,127 @@
+"""fedlint command line: ``python -m repro.analysis`` / ``repro-lint``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/self-check error — the same
+contract the ``scripts/check_*_artifact.py`` checkers use, so the CI leg
+composes with ``set -e`` unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from typing import List, Optional, Sequence, Set
+
+from repro.analysis import engine
+from repro.analysis import rules as _rules  # noqa: F401 — registers the rule set
+
+_DOC_RULE_RE = re.compile(r"^###\s+`([a-z0-9\-]+)`", re.MULTILINE)
+
+
+def doc_rule_ids(doc_text: str) -> Set[str]:
+    """Rule ids claimed by the catalogue doc (its ``### `rule-id``` headings)."""
+    return set(_DOC_RULE_RE.findall(doc_text))
+
+
+def check_docs(doc_path: str) -> List[str]:
+    """Doc/code drift guard: every registered rule documented, every
+    documented rule registered. Returns human-readable errors (empty=ok)."""
+    try:
+        with open(doc_path, encoding="utf-8") as fh:
+            documented = doc_rule_ids(fh.read())
+    except OSError as e:
+        return [f"cannot read rule catalogue {doc_path}: {e}"]
+    registered = set(engine.rule_ids())
+    errors = []
+    for missing in sorted(registered - documented):
+        errors.append(
+            f"rule {missing!r} is registered but has no `### `{missing}`` "
+            f"section in {doc_path}"
+        )
+    for stale in sorted(documented - registered):
+        errors.append(
+            f"{doc_path} documents rule {stale!r} but no such rule is "
+            f"registered"
+        )
+    return errors
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="fedlint: static enforcement of the repo's ledger/PRNG/"
+                    "carry/kernel contracts",
+    )
+    p.add_argument("paths", nargs="*", help="files or directories to analyze")
+    p.add_argument(
+        "--format", choices=("human", "json"), default="human",
+        help="report format (default: human)",
+    )
+    p.add_argument(
+        "--out", metavar="FILE",
+        help="also write the report to FILE (same format)",
+    )
+    p.add_argument(
+        "--rules", metavar="ID[,ID...]",
+        help="run only these rule ids (default: all registered)",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the registered rule catalogue and exit",
+    )
+    p.add_argument(
+        "--check-docs", metavar="DOC",
+        help="verify DOC's ### `rule-id` headings match the registered rule "
+             "set (doc/code drift guard), then continue with analysis if "
+             "paths were given",
+    )
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for r in engine.registered_rules():
+            print(f"{r.id} [{r.scope}]\n    {r.summary}")
+        return 0
+
+    if args.check_docs:
+        errors = check_docs(args.check_docs)
+        if errors:
+            for err in errors:
+                print(f"repro-lint: {err}", file=sys.stderr)
+            return 2
+        if not args.paths:
+            print(f"repro-lint: {args.check_docs} matches the registered rule set")
+            return 0
+
+    if not args.paths:
+        print("repro-lint: no paths given (try: repro-lint src benchmarks "
+              "examples)", file=sys.stderr)
+        return 2
+
+    selected = None
+    if args.rules:
+        selected = [r.strip() for r in args.rules.split(",") if r.strip()]
+        try:
+            report = engine.analyze_paths(args.paths, rules=selected)
+        except KeyError as e:
+            print(f"repro-lint: {e.args[0]}", file=sys.stderr)
+            return 2
+    else:
+        report = engine.analyze_paths(args.paths)
+
+    rendered = (
+        report.render_json() if args.format == "json" else report.render_human()
+    )
+    print(rendered)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(rendered + "\n")
+    return 0 if report.clean else 1
+
+
+def console() -> None:
+    """``repro-lint`` console-script entry point."""
+    sys.exit(main())

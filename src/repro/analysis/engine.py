@@ -1,0 +1,397 @@
+"""fedlint rule engine: AST-level enforcement of the repo's contracts.
+
+The codebase's hardest-won guarantees are *conventions* — exact Python-int
+bit ledgers (the PR-2 int32-overflow class), the fold_in/split PRNG key
+schedule that keeps Q-FedNew bit-identical across backends, ``client_fields``
+participation masking, paired reference/Pallas kernels — and runtime tests
+only catch a violation they already contain a triggering case for. This
+module is the static side of that enforcement: rules inspect the *source* of
+every solver/codec/ledger and flag whole bug classes at review time, before
+a conformance case exists.
+
+Architecture:
+
+  * :class:`Finding` — one diagnostic: file, line, rule id, message. Ordered
+    and JSON-able; the CLI's exit code is ``findings != []``.
+  * :class:`Module` — a parsed source file handed to per-module rules: the
+    AST, a parent map, the comment table (``tokenize``-derived, used both for
+    pragma suppression and the ``(n, ...)``-shape field annotations the
+    carry-field rule reads), and the module's import-alias table (so
+    ``import jax.numpy as jnp`` and ``from jax import random`` resolve to
+    canonical dotted paths before any rule matches on them).
+  * :class:`Project` — the whole analyzed file set, for rules that check
+    cross-file structure (kernel packages must pair ``ref.py``/``ops.py``
+    with a dispatch-registry entry).
+  * :func:`register_rule` / :func:`registered_rules` — the rule registry the
+    CLI, the doc drift guard, and the tests all read from.
+
+Suppression: a finding is dropped when the offending line (or the line
+directly above it) carries ``# fedlint: disable=RULE-ID[,RULE-ID...]``, or
+the file carries ``# fedlint: disable-file=RULE-ID`` anywhere. ``all``
+disables every rule. Suppressions are counted and reported — a clean run
+with 30 pragmas is not the same thing as a clean run.
+
+Robustness contract (property-tested): :func:`analyze_source` never raises
+on arbitrary input — unparseable files become ``parse-error`` findings and a
+rule that crashes becomes an ``internal-error`` finding naming the rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: Pseudo-rule ids the engine itself emits (not registered, always active).
+PARSE_ERROR = "parse-error"
+INTERNAL_ERROR = "internal-error"
+
+_PRAGMA_RE = re.compile(
+    r"#\s*fedlint:\s*(disable|disable-file)\s*=\s*([A-Za-z0-9_\-]+"
+    r"(?:\s*,\s*[A-Za-z0-9_\-]+)*)"
+)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic, anchored to a source line."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, payload: Dict[str, object]) -> "Finding":
+        return cls(
+            path=str(payload["path"]),
+            line=int(payload["line"]),  # type: ignore[arg-type]
+            rule=str(payload["rule"]),
+            message=str(payload["message"]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered check.
+
+    id       kebab-case rule id (what pragmas and --rules select on)
+    summary  one-line statement of the bug class the rule encodes; the doc
+             drift guard compares docs/analysis.md against these ids
+    check    per-module rules: ``check(module) -> iterable[Finding]``;
+             project rules: ``check(project) -> iterable[Finding]``
+    scope    "module" | "project"
+    """
+
+    id: str
+    summary: str
+    check: Callable[..., Iterable[Finding]]
+    scope: str = "module"
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register_rule(rule: Rule) -> Rule:
+    """Register a rule (idempotent; later wins — mirrors the codec/kernel
+    registries)."""
+    if rule.scope not in ("module", "project"):
+        raise ValueError(f"unknown rule scope {rule.scope!r}")
+    _RULES[rule.id] = rule
+    return rule
+
+
+def rule(id: str, summary: str, scope: str = "module"):
+    """Decorator form of :func:`register_rule`."""
+
+    def deco(fn):
+        register_rule(Rule(id=id, summary=summary, check=fn, scope=scope))
+        return fn
+
+    return deco
+
+
+def registered_rules() -> Tuple[Rule, ...]:
+    return tuple(_RULES[k] for k in sorted(_RULES))
+
+
+def rule_ids() -> Tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+# ---------------------------------------------------------------------------
+# parsed-module context
+# ---------------------------------------------------------------------------
+
+
+def _comment_table(source: str) -> Dict[int, str]:
+    """line -> comment text (including the ``#``). Tokenize-based so ``#``
+    inside string literals never reads as a comment; falls back to a naive
+    scan if tokenization fails on otherwise-parseable source."""
+    out: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except (tokenize.TokenError, IndentationError, SyntaxError, ValueError):
+        for i, line in enumerate(source.splitlines(), 1):
+            if "#" in line:
+                out[i] = line[line.index("#"):]
+    return out
+
+
+def _import_table(tree: ast.AST) -> Dict[str, str]:
+    """Local alias -> canonical dotted path, from every import statement in
+    the module (nested ones included). ``import jax.numpy as jnp`` maps
+    ``jnp -> jax.numpy``; ``from jax import random`` maps ``random ->
+    jax.random``; plain ``import random`` maps ``random -> random`` — which
+    is how rules tell stdlib ``random`` apart from ``jax.random``."""
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                table[local] = alias.name if alias.asname else local
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                local = alias.asname or alias.name
+                table[local] = f"{node.module}.{alias.name}"
+    return table
+
+
+class Module:
+    """One parsed source file, with the derived tables rules share."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+        self.comments = _comment_table(source)
+        self.imports = _import_table(self.tree)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def canonical(self, dotted: Optional[str]) -> Optional[str]:
+        """Resolve a dotted name's first segment through the import table:
+        ``jnp.zeros`` -> ``jax.numpy.zeros``, ``random.random`` -> stdlib
+        ``random.random`` iff the module imported stdlib random."""
+        if not dotted:
+            return dotted
+        head, _, rest = dotted.partition(".")
+        resolved = self.imports.get(head)
+        if resolved is None:
+            return dotted
+        return f"{resolved}.{rest}" if rest else resolved
+
+    def finding(self, rule_id: str, node_or_line, message: str) -> Finding:
+        line = (
+            node_or_line
+            if isinstance(node_or_line, int)
+            else getattr(node_or_line, "lineno", 1)
+        )
+        return Finding(path=self.path, line=line, rule=rule_id, message=message)
+
+    # -- pragma suppression --------------------------------------------------
+
+    def _pragmas(self) -> Tuple[set, Dict[int, set]]:
+        file_level: set = set()
+        per_line: Dict[int, set] = {}
+        for line, comment in self.comments.items():
+            m = _PRAGMA_RE.search(comment)
+            if not m:
+                continue
+            ids = {part.strip() for part in m.group(2).split(",") if part.strip()}
+            if m.group(1) == "disable-file":
+                file_level |= ids
+            else:
+                per_line.setdefault(line, set()).update(ids)
+        return file_level, per_line
+
+    def suppressed(self, finding: Finding) -> bool:
+        """True when a pragma on the finding's line, the line above it, or a
+        file-level pragma disables the rule (or ``all``)."""
+        file_level, per_line = self._pragmas()
+        if finding.rule in file_level or "all" in file_level:
+            return True
+        for line in (finding.line, finding.line - 1):
+            ids = per_line.get(line, ())
+            if finding.rule in ids or "all" in ids:
+                return True
+        return False
+
+
+class Project:
+    """The whole analyzed file set, for cross-file rules."""
+
+    def __init__(self, files: Sequence[str], modules: Dict[str, Module]):
+        self.files = tuple(files)
+        self.modules = modules  # path -> Module, parseable files only
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git", ".hypothesis", ".pytest_cache"}
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted, deduplicated .py file list."""
+    out: List[str] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for root, dirs, names in os.walk(path):
+                dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+                out.extend(
+                    os.path.join(root, n) for n in sorted(names)
+                    if n.endswith(".py")
+                )
+        elif path.endswith(".py"):
+            out.append(path)
+    seen, files = set(), []
+    for f in out:
+        norm = os.path.normpath(f)
+        if norm not in seen:
+            seen.add(norm)
+            files.append(norm)
+    return files
+
+
+def _select(rules: Optional[Sequence[str]]) -> List[Rule]:
+    if rules is None:
+        return list(registered_rules())
+    unknown = sorted(set(rules) - set(_RULES))
+    if unknown:
+        raise KeyError(
+            f"unknown rule id(s) {unknown}; registered rules: "
+            f"{', '.join(rule_ids())}"
+        )
+    return [_RULES[r] for r in sorted(set(rules))]
+
+
+def _run_rule(r: Rule, target, collector: List[Finding], path: str) -> None:
+    """Run one rule, converting a crash into an ``internal-error`` finding —
+    the engine's never-raise contract (property-tested)."""
+    try:
+        collector.extend(r.check(target))
+    except Exception as e:  # noqa: BLE001 — any rule bug becomes a finding
+        collector.append(Finding(
+            path=path, line=1, rule=INTERNAL_ERROR,
+            message=f"rule {r.id!r} crashed: {type(e).__name__}: {e}",
+        ))
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    """One analysis run: active findings, suppressed count, files covered."""
+
+    findings: Tuple[Finding, ...]
+    suppressed: int
+    files: int
+    rules: Tuple[str, ...]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "fedlint": 1,
+            "rules": list(self.rules),
+            "files": self.files,
+            "suppressed": self.suppressed,
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+    def render_json(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True)
+
+    def render_human(self) -> str:
+        lines = [f.format() for f in self.findings]
+        noun = "finding" if len(self.findings) == 1 else "findings"
+        lines.append(
+            f"fedlint: {len(self.findings)} {noun} "
+            f"({self.suppressed} suppressed) in {self.files} files"
+        )
+        return "\n".join(lines)
+
+
+def analyze_modules(
+    sources: Dict[str, str], rules: Optional[Sequence[str]] = None
+) -> Report:
+    """Analyze an in-memory ``{path: source}`` mapping (what the CLI's
+    file-walking front end and the tests' fixture harness both call)."""
+    active = _select(rules)
+    raw: List[Finding] = []
+    modules: Dict[str, Module] = {}
+    for path, source in sources.items():
+        try:
+            modules[path] = Module(path, source)
+        except (SyntaxError, ValueError, MemoryError, RecursionError) as e:
+            line = getattr(e, "lineno", None) or 1
+            raw.append(Finding(
+                path=path, line=int(line), rule=PARSE_ERROR,
+                message=f"could not parse: {type(e).__name__}: {e.args[0] if e.args else e}",
+            ))
+    for r in active:
+        if r.scope != "module":
+            continue
+        for path, mod in modules.items():
+            _run_rule(r, mod, raw, path)
+    project = Project(list(sources), modules)
+    for r in active:
+        if r.scope == "project":
+            _run_rule(r, project, raw, project.files[0] if project.files else "<project>")
+    kept, suppressed = [], 0
+    for f in sorted(set(raw)):
+        mod = modules.get(f.path)
+        if mod is not None and mod.suppressed(f):
+            suppressed += 1
+        else:
+            kept.append(f)
+    return Report(
+        findings=tuple(kept),
+        suppressed=suppressed,
+        files=len(sources),
+        rules=tuple(r.id for r in active),
+    )
+
+
+def analyze_source(
+    source: str, path: str = "<string>", rules: Optional[Sequence[str]] = None
+) -> Report:
+    """Analyze one in-memory module. Never raises on arbitrary input."""
+    return analyze_modules({path: source}, rules=rules)
+
+
+def analyze_paths(
+    paths: Sequence[str], rules: Optional[Sequence[str]] = None
+) -> Report:
+    """Walk ``paths`` for .py files and analyze them all as one project."""
+    sources: Dict[str, str] = {}
+    for f in iter_py_files(paths):
+        try:
+            with open(f, encoding="utf-8", errors="replace") as fh:
+                sources[f] = fh.read()
+        except OSError:
+            continue  # raced deletion / permission: nothing to analyze
+    return analyze_modules(sources, rules=rules)

@@ -1,0 +1,700 @@
+"""The fedlint rule set: six repo-specific contracts, enforced at the AST.
+
+Every rule encodes a bug class this repo has actually fought (see
+docs/analysis.md for the catalogue with war stories). Rules are registered
+with the engine at import time; ``repro.analysis`` imports this module, so
+``python -m repro.analysis`` always runs the full set.
+
+Heuristics are deliberately conservative where trace-time information is
+missing (a static pass cannot know whether a value is traced): each rule
+scopes itself to the code regions where the contract applies — ledger
+factories, solver ``step`` functions, ``lax.scan`` bodies, solver-state
+NamedTuples — and anything it cannot prove is left alone. False positives
+are handled with ``# fedlint: disable=RULE-ID`` plus a justifying comment.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.engine import Finding, Module, Project, rule
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def call_path(mod: Module, call: ast.Call) -> Optional[str]:
+    """Canonical dotted path of a call's target (import aliases resolved)."""
+    return mod.canonical(dotted(call.func))
+
+
+def _functions(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            yield node
+
+
+def _body(fn: ast.AST) -> List[ast.stmt]:
+    if isinstance(fn, ast.Lambda):
+        return [ast.Expr(value=fn.body)]
+    return list(fn.body)
+
+
+def _walk_scope(fn: ast.AST) -> Iterator[ast.AST]:
+    """Every node lexically inside ``fn``'s body (including nested defs —
+    code defined inside a traced scope runs under the same trace)."""
+    for stmt in _body(fn):
+        yield from ast.walk(stmt)
+
+
+def _assigned_names(node: ast.AST) -> Set[str]:
+    """Names (re)bound anywhere under ``node`` (assignments, for-targets,
+    with-as, walrus, aug-assign) — what resets a PRNG key's consumption."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        targets: Iterable[ast.AST] = ()
+        if isinstance(n, ast.Assign):
+            targets = n.targets
+        elif isinstance(n, (ast.AnnAssign, ast.AugAssign)):
+            targets = (n.target,)
+        elif isinstance(n, ast.For):
+            targets = (n.target,)
+        elif isinstance(n, ast.NamedExpr):
+            targets = (n.target,)
+        elif isinstance(n, ast.withitem) and n.optional_vars is not None:
+            targets = (n.optional_vars,)
+        elif isinstance(n, ast.comprehension):
+            targets = (n.target,)
+        for t in targets:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    out.add(sub.id)
+    return out
+
+
+def _resolve_lambda(mod: Module, name: str, near: ast.AST) -> Optional[ast.Lambda]:
+    """Resolve ``uplink=vec`` where ``vec = lambda ...`` in the same module
+    (the baselines ledgers' idiom)."""
+    del near  # one module-wide namespace is enough for this codebase's idiom
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return node.value
+    return None
+
+
+# ---------------------------------------------------------------------------
+# scope finders shared by several rules
+# ---------------------------------------------------------------------------
+
+_LEDGER_FN_NAMES = ("uplink", "downlink")
+
+
+def ledger_scopes(mod: Module) -> List[Tuple[str, ast.AST]]:
+    """Code regions under the exact-Python-int ledger contract:
+
+      * functions named ``uplink`` / ``downlink`` (SolverLedger factories)
+      * functions named ``*payload_bits`` (the quantization/codec helpers;
+        the traced ``*_metric`` / ``*_array`` counterparts are exempt by
+        name — they are the sanctioned lowering of the exact count)
+      * lambdas (or names resolving to lambdas) passed as ``uplink=`` /
+        ``downlink=`` to a ``SolverLedger(...)`` construction
+    """
+    scopes: List[Tuple[str, ast.AST]] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name in _LEDGER_FN_NAMES or node.name.endswith("payload_bits"):
+                scopes.append((node.name, node))
+        elif isinstance(node, ast.Call):
+            path = dotted(node.func) or ""
+            if path.split(".")[-1] != "SolverLedger":
+                continue
+            for kw in node.keywords:
+                if kw.arg not in _LEDGER_FN_NAMES:
+                    continue
+                value: Optional[ast.AST] = kw.value
+                if isinstance(value, ast.Name):
+                    value = _resolve_lambda(mod, value.id, node)
+                if isinstance(value, ast.Lambda):
+                    scopes.append((kw.arg, value))
+    return scopes
+
+
+def _scan_bodies(mod: Module) -> List[ast.AST]:
+    """Function/lambda bodies passed as the first argument of
+    ``jax.lax.scan`` (the engine compiles solver rounds through it — a scan
+    body is always traced)."""
+    out: List[ast.AST] = []
+    local_defs = {
+        n.name: n for n in ast.walk(mod.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        path = call_path(mod, node) or ""
+        if not (path.endswith("lax.scan") or path == "scan"):
+            continue
+        fn = node.args[0]
+        if isinstance(fn, ast.Lambda):
+            out.append(fn)
+        elif isinstance(fn, ast.Name) and fn.id in local_defs:
+            out.append(local_defs[fn.id])
+    return out
+
+
+def traced_scopes(mod: Module) -> List[Tuple[str, ast.AST]]:
+    """Code regions that execute under a JAX trace by this repo's
+    architecture: solver ``step`` functions (every registry solver's round
+    is jitted/scanned by the engine) and ``lax.scan`` bodies."""
+    scopes: List[Tuple[str, ast.AST]] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            parts = node.name.split("_")
+            # make_*/build_* are host-side factories that *assemble* a step;
+            # the traced function is the inner def they return (caught on its
+            # own name when this walk reaches it)
+            if parts[0] in ("make", "build", "get"):
+                continue
+            if node.name == "step" or "step" in parts:
+                scopes.append((node.name, node))
+    for fn in _scan_bodies(mod):
+        label = getattr(fn, "name", "<scan body>")
+        if not any(s is fn for _, s in scopes):
+            scopes.append((label, fn))
+    return scopes
+
+
+# ---------------------------------------------------------------------------
+# rule: ledger-int-purity
+# ---------------------------------------------------------------------------
+
+_TRACED_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.scipy.", "jnp.")
+
+
+@rule(
+    "ledger-int-purity",
+    "SolverLedger uplink/downlink factories and *payload_bits helpers must "
+    "stay exact Python-int arithmetic (no float literals, true division, or "
+    "traced jax/numpy ops) — the PR-2 int32-overflow bug class",
+)
+def ledger_int_purity(mod: Module) -> Iterator[Finding]:
+    for scope_name, scope in ledger_scopes(mod):
+        for node in _walk_scope(scope):
+            if isinstance(node, ast.Constant) and isinstance(node.value, float):
+                yield mod.finding(
+                    "ledger-int-purity", node,
+                    f"float literal {node.value!r} in exact-int ledger code "
+                    f"({scope_name}); bit counts are Python ints end to end",
+                )
+            elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+                yield mod.finding(
+                    "ledger-int-purity", node,
+                    f"true division in exact-int ledger code ({scope_name}); "
+                    f"use // so the count never round-trips through float",
+                )
+            elif isinstance(node, ast.Call):
+                path = call_path(mod, node) or ""
+                if path == "float":
+                    yield mod.finding(
+                        "ledger-int-purity", node,
+                        f"float() conversion in exact-int ledger code "
+                        f"({scope_name})",
+                    )
+                elif path.startswith(_TRACED_PREFIXES):
+                    yield mod.finding(
+                        "ledger-int-purity", node,
+                        f"traced op {path} in ledger code ({scope_name}); "
+                        f"exact ledgers are host-side Python ints — lower "
+                        f"via quantization.payload_bits_array in the metric "
+                        f"path instead",
+                    )
+                elif re.match(r"numpy\.float\d*$|numpy\.floating$", path):
+                    yield mod.finding(
+                        "ledger-int-purity", node,
+                        f"numpy float construction {path} in exact-int "
+                        f"ledger code ({scope_name})",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# rule: prng-key-reuse
+# ---------------------------------------------------------------------------
+
+_SAMPLERS = {
+    "normal", "uniform", "bernoulli", "randint", "permutation", "choice",
+    "categorical", "gumbel", "laplace", "exponential", "truncated_normal",
+    "poisson", "gamma", "beta", "dirichlet", "rademacher", "bits", "ball",
+    "orthogonal", "t", "cauchy", "logistic", "multivariate_normal",
+}
+# fold_in is deliberately NOT a consumer: fold_in(key, i) with distinct data
+# is the sanctioned way to derive many streams from one key (the repo's
+# per-leaf codec schedule). split IS a consumer: split(key) twice yields the
+# same subkeys twice.
+_CONSUMERS = _SAMPLERS | {"split"}
+
+
+def _consumed_key(mod: Module, call: ast.Call) -> Optional[str]:
+    """The Name a ``jax.random.*`` consuming call reads its key from."""
+    path = call_path(mod, call) or ""
+    parts = path.split(".")
+    if len(parts) < 2 or ".".join(parts[:-1]) != "jax.random":
+        return None
+    if parts[-1] not in _CONSUMERS:
+        return None
+    key_arg: Optional[ast.AST] = call.args[0] if call.args else None
+    for kw in call.keywords:
+        if kw.arg == "key":
+            key_arg = kw.value
+    if isinstance(key_arg, ast.Name):
+        return key_arg.id
+    return None
+
+
+class _KeyScan:
+    """Statement-order interpreter for one function scope: tracks, per key
+    name, how many consuming ``jax.random`` calls it has fed since its last
+    rebinding. Branches (if/try) are analyzed independently and merged with
+    max — consumption on exclusive paths is not reuse."""
+
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.findings: List[Finding] = []
+
+    def run(self, fn: ast.AST) -> List[Finding]:
+        self._stmts(_body(fn), {})
+        return self.findings
+
+    # -- statement walk ------------------------------------------------------
+
+    def _stmts(self, stmts: Sequence[ast.stmt], state: Dict[str, int]) -> Dict[str, int]:
+        for stmt in stmts:
+            state = self._stmt(stmt, state)
+        return state
+
+    def _stmt(self, stmt: ast.stmt, state: Dict[str, int]) -> Dict[str, int]:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._stmts(stmt.body, {})  # fresh scope
+            return state
+        if isinstance(stmt, ast.ClassDef):
+            self._stmts(stmt.body, {})
+            return state
+        if isinstance(stmt, ast.If):
+            a = self._stmts(stmt.body, dict(state))
+            b = self._stmts(stmt.orelse, dict(state))
+            # guard-clause idiom: a branch that returns/raises never reaches
+            # the continuation, so its consumption must not merge forward
+            # (``if axis_name is None: return split(key, a)`` followed by
+            # ``split(key, b)`` is two exclusive consumers, not reuse)
+            a_term = self._terminates(stmt.body)
+            b_term = bool(stmt.orelse) and self._terminates(stmt.orelse)
+            if a_term and b_term:
+                return dict(state)  # continuation unreachable from either
+            if a_term:
+                return b
+            if b_term:
+                return a
+            return self._merge(a, b)
+        if isinstance(stmt, ast.Try):
+            merged = self._stmts(stmt.body, dict(state))
+            for handler in stmt.handlers:
+                merged = self._merge(merged, self._stmts(handler.body, dict(state)))
+            merged = self._stmts(stmt.orelse, merged)
+            return self._stmts(stmt.finalbody, merged)
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            self._loop(stmt)
+            inner = dict(state)
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._consume_in_expr(stmt.iter, inner)
+                for name in _assigned_names(stmt.target):
+                    inner[name] = 0
+            else:
+                self._consume_in_expr(stmt.test, inner)
+            inner = self._stmts(stmt.body, inner)
+            return self._stmts(stmt.orelse, inner)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            inner = dict(state)
+            for item in stmt.items:
+                self._consume_in_expr(item.context_expr, inner)
+                if item.optional_vars is not None:
+                    for name in _assigned_names(item.optional_vars):
+                        inner[name] = 0
+            return self._stmts(stmt.body, inner)
+        # plain statement: consume from its expressions, then apply bindings
+        self._consume_in_expr(stmt, state)
+        for name in _assigned_names(stmt):
+            state[name] = 0
+        return state
+
+    @staticmethod
+    def _merge(a: Dict[str, int], b: Dict[str, int]) -> Dict[str, int]:
+        return {k: max(a.get(k, 0), b.get(k, 0)) for k in set(a) | set(b)}
+
+    @staticmethod
+    def _terminates(stmts: Sequence[ast.stmt]) -> bool:
+        return bool(stmts) and isinstance(
+            stmts[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue)
+        )
+
+    # -- events --------------------------------------------------------------
+
+    def _consume_in_expr(self, node: ast.AST, state: Dict[str, int]) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Lambda, ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # separate scope (analyzed via _functions walk)
+            if not isinstance(sub, ast.Call):
+                continue
+            name = _consumed_key(self.mod, sub)
+            if name is None:
+                continue
+            count = state.get(name, 0)
+            if count >= 1:
+                self.findings.append(self.mod.finding(
+                    "prng-key-reuse", sub,
+                    f"PRNG key {name!r} fed to a second consuming "
+                    f"jax.random call without an intervening split/fold_in "
+                    f"— both draws read the same stream",
+                ))
+            state[name] = count + 1
+
+    def _loop(self, loop: ast.stmt) -> None:
+        """Key consumed inside a loop body but never rebound there: every
+        iteration draws the same stream."""
+        consumed: Dict[str, ast.Call] = {}
+        for sub in ast.walk(loop):
+            if isinstance(sub, ast.Call):
+                name = _consumed_key(self.mod, sub)
+                if name is not None and name not in consumed:
+                    consumed[name] = sub
+        rebound = _assigned_names(loop)
+        for name, call in consumed.items():
+            if name not in rebound:
+                self.findings.append(self.mod.finding(
+                    "prng-key-reuse", call,
+                    f"PRNG key {name!r} consumed inside a loop without a "
+                    f"per-iteration split/fold_in — every iteration draws "
+                    f"identical randomness",
+                ))
+
+
+@rule(
+    "prng-key-reuse",
+    "a PRNG key passed to two consuming jax.random calls (or consumed "
+    "across loop iterations) without an intervening split/fold_in — the "
+    "key-schedule contract that keeps Q-FedNew bit-identical across "
+    "backends and device counts",
+)
+def prng_key_reuse(mod: Module) -> Iterator[Finding]:
+    seen: Set[int] = set()
+    for fn in _functions(mod.tree):
+        if isinstance(fn, ast.Lambda):
+            continue  # lambdas have no statement structure worth scanning
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        yield from _KeyScan(mod).run(fn)
+    # module top level (benchmark scripts draw keys there too)
+    top = [s for s in mod.tree.body
+           if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))]
+    scanner = _KeyScan(mod)
+    scanner._stmts(top, {})
+    yield from scanner.findings
+
+
+# ---------------------------------------------------------------------------
+# rule: host-sync-in-traced
+# ---------------------------------------------------------------------------
+
+_STATIC_ATTRS = {"shape", "size", "ndim", "dtype", "itemsize", "n_clients", "dim"}
+_HOST_ROOTS = {"cfg", "config", "self"}
+
+
+def _is_static_arg(node: ast.AST) -> bool:
+    """Arguments whose float()/int() is trace-safe: literals, config-rooted
+    attribute chains, and shape/size metadata (static under tracing)."""
+    if isinstance(node, ast.Constant):
+        return True
+    names = {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+    if names and names <= _HOST_ROOTS:
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "len":
+            return True
+    return False
+
+
+@rule(
+    "host-sync-in-traced",
+    "float()/int()/.item()/np.asarray applied to traced values inside "
+    "solver step functions and lax.scan bodies — forces a device sync (or a "
+    "ConcretizationTypeError) in code the engine compiles",
+)
+def host_sync_in_traced(mod: Module) -> Iterator[Finding]:
+    reported: Set[Tuple[int, int]] = set()
+    for scope_name, scope in traced_scopes(mod):
+        for node in _walk_scope(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            key = (node.lineno, node.col_offset)
+            if key in reported:
+                continue
+            path = call_path(mod, node) or ""
+            if path in ("float", "int", "bool"):
+                arg = node.args[0] if node.args else None
+                if arg is not None and not _is_static_arg(arg):
+                    reported.add(key)
+                    yield mod.finding(
+                        "host-sync-in-traced", node,
+                        f"{path}() on a (potentially traced) value inside "
+                        f"{scope_name}; hoist to config/shape data or keep "
+                        f"it a jnp op",
+                    )
+            elif isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                    and not node.args:
+                reported.add(key)
+                yield mod.finding(
+                    "host-sync-in-traced", node,
+                    f".item() inside {scope_name} blocks on device transfer "
+                    f"every round; keep metrics as arrays and sync once "
+                    f"outside the compiled region",
+                )
+            elif path.startswith("numpy.") and path.split(".")[1] in (
+                "asarray", "array", "copy", "float32", "float64",
+            ):
+                reported.add(key)
+                yield mod.finding(
+                    "host-sync-in-traced", node,
+                    f"{path} inside {scope_name} materializes on host; use "
+                    f"jnp.* so the op stays in the compiled graph",
+                )
+
+
+# ---------------------------------------------------------------------------
+# rule: carry-field-declared
+# ---------------------------------------------------------------------------
+
+_PER_CLIENT_COMMENT = re.compile(r"\(\s*n(?:_local|_clients)?\s*,|per-client")
+
+
+def _client_field_unions(mod: Module) -> Optional[Set[str]]:
+    """Union of every ``client_fields=(...)`` tuple passed to a
+    FederatedSolver construction in the module; None when the module never
+    constructs one (rule does not apply)."""
+    found_solver = False
+    union: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = dotted(node.func) or ""
+        if path.split(".")[-1] != "FederatedSolver":
+            continue
+        found_solver = True
+        for kw in node.keywords:
+            if kw.arg == "client_fields" and isinstance(kw.value, (ast.Tuple, ast.List)):
+                for elt in kw.value.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        union.add(elt.value)
+    return union if found_solver else None
+
+
+@rule(
+    "carry-field-declared",
+    "solver-state fields annotated as per-client (a leading (n, ...) axis "
+    "in their trailing comment) must be listed in the solver's "
+    "client_fields — undeclared rows silently skip participation masking "
+    "and shard replication (the unmasked-dual bug class)",
+)
+def carry_field_declared(mod: Module) -> Iterator[Finding]:
+    declared = _client_field_unions(mod)
+    if declared is None:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef) or not node.name.endswith("State"):
+            continue
+        bases = {dotted(b) or "" for b in node.bases}
+        if not any(b.split(".")[-1] == "NamedTuple" for b in bases):
+            continue
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign) or not isinstance(stmt.target, ast.Name):
+                continue
+            field = stmt.target.id
+            comment = mod.comments.get(stmt.lineno, "")
+            if _PER_CLIENT_COMMENT.search(comment) and field not in declared:
+                yield mod.finding(
+                    "carry-field-declared", stmt,
+                    f"{node.name}.{field} is annotated per-client "
+                    f"({comment.lstrip('# ')!r}) but missing from "
+                    f"client_fields {sorted(declared)}; it will neither be "
+                    f"sharded over the client mesh axis nor masked under "
+                    f"partial participation",
+                )
+
+
+# ---------------------------------------------------------------------------
+# rule: kernel-pairing
+# ---------------------------------------------------------------------------
+
+
+def _registry_strings(mod: Module) -> Tuple[Set[str], Set[str]]:
+    """(names, impl-paths) from every ``register_kernel(...)`` call."""
+    names: Set[str] = set()
+    impls: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = dotted(node.func) or ""
+        if path.split(".")[-1] != "register_kernel":
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                names.add(arg.value)
+        for kw in node.keywords:
+            if isinstance(kw.value, ast.Constant) and isinstance(kw.value.value, str):
+                impls.add(kw.value.value)
+    return names, impls
+
+
+@rule(
+    "kernel-pairing",
+    "every kernels/* package must pair a ref.py reference oracle with an "
+    "ops.py wrapper AND a dispatch-registry entry — an unregistered kernel "
+    "is unreachable through the backend-aware dispatch layer and silently "
+    "escapes the interpret-mode CI leg",
+    scope="project",
+)
+def kernel_pairing(project: Project) -> Iterator[Finding]:
+    # kernels trees = directories whose basename is 'kernels' with their own
+    # __init__.py among the analyzed files (the registry module)
+    by_dir: Dict[str, List[str]] = {}
+    for f in project.files:
+        by_dir.setdefault(os.path.dirname(f), []).append(os.path.basename(f))
+    for d, names in sorted(by_dir.items()):
+        if os.path.basename(d) != "kernels" or "__init__.py" not in names:
+            continue
+        registry_path = os.path.join(d, "__init__.py")
+        reg_mod = project.modules.get(os.path.normpath(registry_path))
+        reg_names, reg_impls = (
+            _registry_strings(reg_mod) if reg_mod else (set(), set())
+        )
+        # subpackages: directories directly under the kernels dir that hold
+        # an __init__.py of their own
+        pkgs = sorted({
+            os.path.relpath(sub, d).split(os.sep)[0]
+            for sub in by_dir
+            if sub != d and os.path.dirname(sub) == d
+            and "__init__.py" in by_dir[sub]
+        })
+        for pkg in pkgs:
+            pkg_dir = os.path.join(d, pkg)
+            pkg_files = set(by_dir.get(pkg_dir, ()))
+            anchor = os.path.normpath(os.path.join(pkg_dir, "__init__.py"))
+            for required, why in (
+                ("ref.py", "the jnp reference oracle the kernel is validated "
+                           "against"),
+                ("ops.py", "the dispatch-facing wrapper (interpret-flag "
+                           "aware)"),
+            ):
+                if required not in pkg_files:
+                    yield Finding(
+                        path=anchor, line=1, rule="kernel-pairing",
+                        message=f"kernel package {pkg!r} has no {required} "
+                                f"({why})",
+                    )
+            registered = (
+                pkg in reg_names
+                or any(f".{pkg}." in impl or impl.startswith(f"{pkg}.")
+                       for impl in reg_impls)
+                or any(n.startswith(f"{pkg}.") for n in reg_names)
+            )
+            if not registered:
+                yield Finding(
+                    path=anchor, line=1, rule="kernel-pairing",
+                    message=f"kernel package {pkg!r} has no register_kernel "
+                            f"entry in {os.path.basename(d)}/__init__.py; "
+                            f"unregistered kernels bypass the backend-aware "
+                            f"dispatch layer (and its interpret-mode CI leg)",
+                )
+
+
+# ---------------------------------------------------------------------------
+# rule: nondeterminism
+# ---------------------------------------------------------------------------
+
+_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+_ENTROPY_CALLS = {"os.urandom", "uuid.uuid1", "uuid.uuid4"}
+_HASH_ORDER_ITERS = {"set", "frozenset", "vars", "globals", "locals"}
+
+
+def _nondet_call(mod: Module, node: ast.Call) -> Optional[str]:
+    path = call_path(mod, node) or ""
+    if path in _CLOCK_CALLS:
+        return f"wall-clock read {path}()"
+    if path in _ENTROPY_CALLS or path.startswith("secrets."):
+        return f"os-entropy source {path}()"
+    if path.startswith("random.") or path == "random":
+        return f"stdlib RNG {path}() (global, unseeded state)"
+    if path.startswith("numpy.random.") and not path.startswith(
+        "numpy.random.default_rng"
+    ):
+        return f"global numpy RNG {path}()"
+    return None
+
+
+@rule(
+    "nondeterminism",
+    "wall clocks, stdlib/global-numpy RNG, os entropy, and hash-order set "
+    "iteration inside traced or ledger code — anything that can differ "
+    "between two runs of the same seed breaks the repo's bit-exactness "
+    "pins",
+)
+def nondeterminism(mod: Module) -> Iterator[Finding]:
+    scopes = traced_scopes(mod) + ledger_scopes(mod)
+    reported: Set[Tuple[int, int]] = set()
+    for scope_name, scope in scopes:
+        for node in _walk_scope(scope):
+            key = (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+            if isinstance(node, ast.Call):
+                why = _nondet_call(mod, node)
+                if why and key not in reported:
+                    reported.add(key)
+                    yield mod.finding(
+                        "nondeterminism", node,
+                        f"{why} inside {scope_name}; derive everything from "
+                        f"the carried PRNG key / host-side seeds so reruns "
+                        f"are bit-identical",
+                    )
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                it = node.iter
+                if isinstance(it, ast.Call) and isinstance(it.func, ast.Name) \
+                        and it.func.id in _HASH_ORDER_ITERS \
+                        and (it.lineno, it.col_offset) not in reported:
+                    reported.add((it.lineno, it.col_offset))
+                    yield mod.finding(
+                        "nondeterminism", it,
+                        f"iteration over {it.func.id}(...) inside "
+                        f"{scope_name}: string-hash randomization makes the "
+                        f"order differ between interpreter runs; sort it or "
+                        f"iterate the original sequence",
+                    )

@@ -40,3 +40,16 @@ dispatch.register_kernel(
     pallas="repro.kernels.stoch_quant.ops:quantize",
     reference="repro.core.quantization:quantize",
 )
+# LM fine-tuning hot spots: registered so the dispatch layer (and its
+# interpret-mode CI sweep) covers every kernel package, not just the two
+# FedNew loops — repro.analysis' kernel-pairing rule enforces this.
+dispatch.register_kernel(
+    "swa_attention",
+    pallas="repro.kernels.swa_attention.ops:swa_attention",
+    reference="repro.kernels.swa_attention.ref:swa_attention_ref",
+)
+dispatch.register_kernel(
+    "slstm_scan",
+    pallas="repro.kernels.slstm_scan.ops:slstm_scan",
+    reference="repro.kernels.slstm_scan.ref:slstm_scan_ref",
+)

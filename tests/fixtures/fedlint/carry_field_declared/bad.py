@@ -1,0 +1,23 @@
+"""Known-bad fixture: a per-client state row missing from client_fields —
+the silent-unmasked-dual bug class (the row is neither sharded over the
+client mesh axis nor masked under partial participation)."""
+
+from typing import NamedTuple
+
+from repro.core import engine
+
+
+class DemoState(NamedTuple):
+    x: object  # (d,) global iterate
+    lam: object  # (n, d) duals
+    comm: object  # per-client cumulative bits
+    step: object  # () round counter
+
+
+def build():
+    return engine.FederatedSolver(
+        name="demo",
+        init=None,
+        step=None,
+        client_fields=("lam",),  # comm forgotten: its rows never mask
+    )

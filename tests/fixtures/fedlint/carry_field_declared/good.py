@@ -1,0 +1,21 @@
+"""Corrected twin: every per-client-annotated field is declared."""
+
+from typing import NamedTuple
+
+from repro.core import engine
+
+
+class DemoState(NamedTuple):
+    x: object  # (d,) global iterate
+    lam: object  # (n, d) duals
+    comm: object  # per-client cumulative bits
+    step: object  # () round counter
+
+
+def build():
+    return engine.FederatedSolver(
+        name="demo",
+        init=None,
+        step=None,
+        client_fields=("lam", "comm"),
+    )

@@ -1,0 +1,20 @@
+"""Known-bad fixture: host syncs inside code the engine compiles — a solver
+step and a lax.scan body."""
+
+import jax
+import numpy as np
+
+
+def step(state, batch):
+    grad = batch - state
+    lr = float(jax.numpy.mean(grad))  # ConcretizationTypeError under jit
+    host = np.asarray(grad)  # device->host copy every round
+    loss = jax.numpy.sum(grad * grad).item()  # blocking sync
+    return state - lr * host.mean(), loss
+
+
+def rollout(xs, carry0):
+    def body(carry, x):
+        nxt = carry + x
+        return nxt, int(nxt)  # host sync inside the scan body
+    return jax.lax.scan(body, carry0, xs)

@@ -1,0 +1,19 @@
+"""Corrected twin: everything stays in the traced graph; host conversions
+only touch static config/shape data."""
+
+import jax
+
+
+def step(state, batch, cfg):
+    grad = batch - state
+    lr = float(cfg.lr)  # config scalar: static under tracing
+    scale = 1.0 / float(grad.size)  # shape metadata: static
+    loss = jax.numpy.sum(grad * grad) * scale  # stays an array
+    return state - lr * jax.numpy.mean(grad), loss
+
+
+def rollout(xs, carry0):
+    def body(carry, x):
+        nxt = carry + x
+        return nxt, nxt  # traced value flows out as an array
+    return jax.lax.scan(body, carry0, xs)

@@ -1,0 +1,3 @@
+"""Known-bad kernel registry: the foo package is never registered."""
+
+from repro.kernels.dispatch import register_kernel  # noqa: F401

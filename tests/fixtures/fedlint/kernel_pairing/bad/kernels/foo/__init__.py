@@ -1,0 +1,2 @@
+"""A kernel package with an ops wrapper but no ref.py oracle and no
+dispatch-registry entry."""

@@ -1,0 +1,9 @@
+"""Corrected twin: foo is registered with the dispatch layer."""
+
+from repro.kernels.dispatch import register_kernel
+
+register_kernel(
+    "foo",
+    pallas="fixtures.kernels.foo.ops:foo",
+    reference="fixtures.kernels.foo.ref:foo_ref",
+)

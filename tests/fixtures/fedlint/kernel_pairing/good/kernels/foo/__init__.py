@@ -1,0 +1,2 @@
+"""A fully paired kernel package: ref.py oracle + ops.py wrapper +
+registry entry in kernels/__init__.py."""

@@ -1,0 +1,2 @@
+def foo(x, *, interpret: bool = True):
+    return x

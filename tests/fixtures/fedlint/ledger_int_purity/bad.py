@@ -1,0 +1,19 @@
+"""Known-bad fixture: every way a ledger factory can leak out of exact
+Python-int arithmetic (the PR-2 int32-overflow bug class)."""
+
+import jax.numpy as jnp
+
+
+def uplink(d, bits, n):
+    return n * d * bits / 8  # true division: count round-trips through float
+
+
+def downlink(d, bits, n):
+    return int(d * 32.0)  # float literal in the product
+
+
+def tree_payload_bits(leaves, bits):
+    total = jnp.int32(0)  # traced op: overflows at 2**31 bits, silently
+    for size in leaves:
+        total = total + jnp.asarray(size * bits)
+    return float(total)

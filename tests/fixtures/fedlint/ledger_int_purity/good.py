@@ -1,0 +1,16 @@
+"""Corrected twin: the same ledger shapes in exact Python-int arithmetic."""
+
+
+def uplink(d, bits, n):
+    return n * ((d * bits + 7) // 8) * 8  # floor-div, byte-aligned, exact
+
+
+def downlink(d, bits, n):
+    return d * 32  # int literal
+
+
+def tree_payload_bits(leaves, bits):
+    total = 0  # Python int: arbitrary precision, never overflows
+    for size in leaves:
+        total += size * bits
+    return total

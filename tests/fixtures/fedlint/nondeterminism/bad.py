@@ -1,0 +1,18 @@
+"""Known-bad fixture: wall clocks, global RNGs, and hash-order iteration in
+traced/ledger code — reruns of the same seed diverge."""
+
+import random
+import time
+
+
+def step(state, batch):
+    jitter = random.random()  # global unseeded stdlib RNG
+    stamp = time.time()  # wall clock baked into the traced value
+    total = 0.0
+    for name in set(batch):  # hash-order iteration: per-run float order
+        total += batch[name]
+    return state + jitter * total, stamp
+
+
+def uplink(d, bits, n):
+    return n * d * bits + random.randint(0, 1)  # ledger differs per run

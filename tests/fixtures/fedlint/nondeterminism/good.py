@@ -1,0 +1,16 @@
+"""Corrected twin: randomness comes from the carried key, iteration order
+is sorted, ledgers are pure functions of their arguments."""
+
+import jax
+
+
+def step(state, batch, key):
+    jitter = jax.random.uniform(key)  # carried PRNG key: replayable
+    total = 0.0
+    for name in sorted(batch):  # deterministic order
+        total += batch[name]
+    return state + jitter * total
+
+
+def uplink(d, bits, n):
+    return n * d * bits

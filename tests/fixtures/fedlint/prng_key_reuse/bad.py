@@ -1,0 +1,17 @@
+"""Known-bad fixture: the same key feeding two consuming draws, and a
+loop-carried key never refreshed — both draws/iterations read one stream."""
+
+import jax
+
+
+def correlated_noise(key, d):
+    a = jax.random.normal(key, (d,))
+    b = jax.random.uniform(key, (d,))  # same key: a and b are correlated
+    return a + b
+
+
+def frozen_loop(key, rounds, d):
+    out = []
+    for _ in range(rounds):
+        out.append(jax.random.normal(key, (d,)))  # identical every iteration
+    return out

@@ -1,0 +1,26 @@
+"""Corrected twin: split before the second draw, fold_in per iteration."""
+
+import jax
+
+
+def independent_noise(key, d):
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (d,))
+    b = jax.random.uniform(kb, (d,))
+    return a + b
+
+
+def fresh_loop(key, rounds, d):
+    out = []
+    for i in range(rounds):
+        sub = jax.random.fold_in(key, i)  # per-iteration stream
+        out.append(jax.random.normal(sub, (d,)))
+    return out
+
+
+def rebound_loop(key, rounds, d):
+    out = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)  # carried key rebound each pass
+        out.append(jax.random.normal(sub, (d,)))
+    return out

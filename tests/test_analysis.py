@@ -1,0 +1,325 @@
+"""fedlint (repro.analysis) tests: every rule proven by a known-bad fixture
+with a corrected twin, pragma suppression, JSON round-trips, CLI exit codes,
+the doc/code drift guard, and the engine's never-crash property."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.analysis import cli, engine  # noqa: E402
+from repro.analysis.engine import Finding, analyze_paths, analyze_source  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "fedlint"
+
+#: rule id -> fixture directory (single-module rules)
+MODULE_RULES = {
+    "ledger-int-purity": "ledger_int_purity",
+    "prng-key-reuse": "prng_key_reuse",
+    "host-sync-in-traced": "host_sync_in_traced",
+    "carry-field-declared": "carry_field_declared",
+    "nondeterminism": "nondeterminism",
+}
+
+
+def _rules_hit(report):
+    return {f.rule for f in report.findings}
+
+
+# ---------------------------------------------------------------------------
+# the registry itself
+# ---------------------------------------------------------------------------
+
+
+def test_at_least_six_rules_registered():
+    ids = engine.rule_ids()
+    assert len(ids) >= 6
+    assert set(MODULE_RULES) | {"kernel-pairing"} <= set(ids)
+
+
+def test_rule_summaries_nonempty():
+    for r in engine.registered_rules():
+        assert r.summary.strip()
+        assert r.scope in ("module", "project")
+
+
+# ---------------------------------------------------------------------------
+# fixture pairs: bad fires, corrected twin is clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule_id", sorted(MODULE_RULES))
+def test_bad_fixture_fires(rule_id):
+    report = analyze_paths([str(FIXTURES / MODULE_RULES[rule_id] / "bad.py")])
+    assert rule_id in _rules_hit(report), report.render_human()
+    for f in report.findings:
+        assert f.line >= 1
+        assert f.message
+
+
+@pytest.mark.parametrize("rule_id", sorted(MODULE_RULES))
+def test_good_fixture_clean(rule_id):
+    report = analyze_paths([str(FIXTURES / MODULE_RULES[rule_id] / "good.py")])
+    assert report.clean, report.render_human()
+
+
+def test_kernel_pairing_bad_tree_fires():
+    report = analyze_paths([str(FIXTURES / "kernel_pairing" / "bad")])
+    messages = [f.message for f in report.findings]
+    assert _rules_hit(report) == {"kernel-pairing"}, report.render_human()
+    assert any("no ref.py" in m for m in messages)
+    assert any("no register_kernel entry" in m for m in messages)
+
+
+def test_kernel_pairing_good_tree_clean():
+    report = analyze_paths([str(FIXTURES / "kernel_pairing" / "good")])
+    assert report.clean, report.render_human()
+
+
+# ---------------------------------------------------------------------------
+# targeted rule semantics (the sanctioned idioms must stay clean)
+# ---------------------------------------------------------------------------
+
+
+def test_fold_in_is_not_consumption():
+    src = (
+        "import jax\n"
+        "def encode(key, leaves):\n"
+        "    out = []\n"
+        "    for j, leaf in enumerate(leaves):\n"
+        "        sub = jax.random.fold_in(key, j)\n"
+        "        out.append(jax.random.normal(sub, leaf.shape))\n"
+        "    return out\n"
+    )
+    assert analyze_source(src, rules=["prng-key-reuse"]).clean
+
+
+def test_guard_clause_split_is_not_reuse():
+    # the codecs.client_keys idiom: exclusive early-return branches
+    src = (
+        "import jax\n"
+        "def client_keys(sub, n_local, axis_name, n_global):\n"
+        "    if axis_name is None:\n"
+        "        return jax.random.split(sub, n_local)\n"
+        "    return jax.random.split(sub, n_global)\n"
+    )
+    assert analyze_source(src, rules=["prng-key-reuse"]).clean
+
+
+def test_carried_split_rebinding_resets():
+    src = (
+        "import jax\n"
+        "def draw(key):\n"
+        "    key, sub = jax.random.split(key)\n"
+        "    a = jax.random.normal(sub, ())\n"
+        "    key, sub = jax.random.split(key)\n"
+        "    b = jax.random.normal(sub, ())\n"
+        "    return a + b\n"
+    )
+    assert analyze_source(src, rules=["prng-key-reuse"]).clean
+
+
+def test_jax_tree_allowed_in_ledger():
+    # comm.tree_payload_bits legitimately walks pytrees host-side
+    src = (
+        "import jax\n"
+        "def tree_payload_bits(tree, bits):\n"
+        "    return sum(int(l.size) * bits for l in jax.tree.leaves(tree))\n"
+    )
+    assert analyze_source(src, rules=["ledger-int-purity"]).clean
+
+
+def test_ledger_lambda_kwarg_is_scanned():
+    # fednew's idiom: uplink=lambda ... passed straight to SolverLedger
+    src = (
+        "from repro.core import engine\n"
+        "ledger = engine.SolverLedger(\n"
+        "    uplink=lambda d, b, n: n * d * b / 8,\n"
+        "    downlink=lambda d, b, n: d * 32,\n"
+        ")\n"
+    )
+    report = analyze_source(src, rules=["ledger-int-purity"])
+    assert _rules_hit(report) == {"ledger-int-purity"}
+
+
+def test_stdlib_random_disambiguated_from_jax_random():
+    # `from jax import random` must NOT read as the stdlib RNG
+    src = (
+        "from jax import random\n"
+        "def step(state, key):\n"
+        "    return state + random.uniform(key)\n"
+    )
+    assert analyze_source(src, rules=["nondeterminism"]).clean
+
+
+def test_factory_functions_are_not_traced_scopes():
+    # make_* assembles a step host-side; float() there is fine
+    src = (
+        "def make_train_step(cfg, mesh):\n"
+        "    lr = float(len(mesh))\n"
+        "    flag = bool(cfg)\n"
+        "    return lr, flag\n"
+    )
+    assert analyze_source(src, rules=["host-sync-in-traced"]).clean
+
+
+# ---------------------------------------------------------------------------
+# pragma suppression
+# ---------------------------------------------------------------------------
+
+_BAD_LEDGER = "def uplink(d, bits, n):\n    return d * bits / 8\n"
+
+
+def test_pragma_same_line_suppresses():
+    src = _BAD_LEDGER.replace(
+        "/ 8", "/ 8  # fedlint: disable=ledger-int-purity -- exactness waived"
+    )
+    report = analyze_source(src)
+    assert report.clean
+    assert report.suppressed == 1
+
+
+def test_pragma_previous_line_suppresses():
+    src = (
+        "def uplink(d, bits, n):\n"
+        "    # fedlint: disable=ledger-int-purity\n"
+        "    return d * bits / 8\n"
+    )
+    report = analyze_source(src)
+    assert report.clean and report.suppressed == 1
+
+
+def test_pragma_disable_file():
+    src = "# fedlint: disable-file=ledger-int-purity\n" + _BAD_LEDGER
+    report = analyze_source(src)
+    assert report.clean and report.suppressed == 1
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    src = _BAD_LEDGER.replace("/ 8", "/ 8  # fedlint: disable=nondeterminism")
+    report = analyze_source(src)
+    assert not report.clean and report.suppressed == 0
+
+
+def test_unsuppressed_baseline():
+    report = analyze_source(_BAD_LEDGER)
+    assert _rules_hit(report) == {"ledger-int-purity"}
+
+
+# ---------------------------------------------------------------------------
+# report formats
+# ---------------------------------------------------------------------------
+
+
+def test_json_round_trip():
+    report = analyze_paths([str(FIXTURES / "ledger_int_purity" / "bad.py")])
+    payload = json.loads(report.render_json())
+    assert payload["fedlint"] == 1
+    assert payload["files"] == 1
+    restored = tuple(Finding.from_json(f) for f in payload["findings"])
+    assert restored == report.findings
+
+
+def test_human_format_lines():
+    report = analyze_source(_BAD_LEDGER, path="demo.py")
+    text = report.render_human()
+    assert "demo.py:2: [ledger-int-purity]" in text
+    assert text.endswith("in 1 files")
+
+
+def test_parse_error_becomes_finding():
+    report = analyze_source("def broken(:\n")
+    assert _rules_hit(report) == {engine.PARSE_ERROR}
+
+
+# ---------------------------------------------------------------------------
+# never-crash property
+# ---------------------------------------------------------------------------
+
+
+@given(st.text(max_size=400))
+@settings(max_examples=60, deadline=None)
+def test_engine_never_raises_on_arbitrary_text(src):
+    report = analyze_source(src)
+    assert isinstance(report.findings, tuple)
+
+
+_SNIPPETS = st.sampled_from([
+    "",
+    "x = 1\n",
+    "import jax\nkey = 0\n",
+    "def uplink(d):\n    return d\n",
+    "def step(s):\n    return s\n",
+    "class AState:\n    pass\n",
+    "for i in set(()):\n    pass\n",
+    "lam = lambda a: a / 2\n",
+    "async def step_async(s):\n    return await s\n",
+    "try:\n    import jax\nexcept ImportError:\n    jax = None\n",
+])
+
+
+@given(st.lists(_SNIPPETS, max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_engine_never_raises_on_valid_modules(parts):
+    src = "\n".join(parts)
+    report = analyze_source(src)
+    # syntactically valid input must never produce engine-internal findings
+    assert engine.INTERNAL_ERROR not in _rules_hit(report)
+
+
+# ---------------------------------------------------------------------------
+# CLI + doc drift guard
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = str(FIXTURES / "ledger_int_purity" / "bad.py")
+    good = str(FIXTURES / "ledger_int_purity" / "good.py")
+    assert cli.main([good]) == 0
+    assert cli.main([bad]) == 1
+    assert cli.main([]) == 2
+    assert cli.main(["--rules", "no-such-rule", good]) == 2
+    capsys.readouterr()
+    out = tmp_path / "report.json"
+    assert cli.main([bad, "--format", "json", "--out", str(out)]) == 1
+    payload = json.loads(out.read_text())
+    assert payload == json.loads(capsys.readouterr().out)
+    assert payload["findings"]
+
+
+def test_cli_list_rules(capsys):
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in engine.rule_ids():
+        assert rule_id in out
+
+
+def test_doc_catalogue_matches_registry():
+    doc = REPO / "docs" / "analysis.md"
+    assert doc.exists(), "docs/analysis.md missing"
+    assert cli.check_docs(str(doc)) == []
+
+
+def test_doc_drift_detected(tmp_path):
+    doc = tmp_path / "analysis.md"
+    doc.write_text("### `ledger-int-purity`\n### `ghost-rule`\n")
+    errors = cli.check_docs(str(doc))
+    assert any("ghost-rule" in e for e in errors)  # documented but missing
+    assert any("prng-key-reuse" in e for e in errors)  # registered, undocumented
+
+
+# ---------------------------------------------------------------------------
+# HEAD stays clean (mirrors the CI ANALYSIS leg)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_head_is_clean():
+    paths = [str(REPO / p) for p in ("src", "benchmarks", "examples")
+             if (REPO / p).exists()]
+    report = analyze_paths(paths)
+    assert report.clean, report.render_human()
