@@ -19,7 +19,7 @@ import time
 
 import jax
 
-SUITES = ("bits_table", "paper_fig1", "paper_fig2", "bits_ablation", "privacy_demo", "kernel_bench", "matfree_scaling", "comm_tradeoff", "solver_frontier", "lm_workload", "async_frontier")
+SUITES = ("bits_table", "paper_fig1", "paper_fig2", "bits_ablation", "privacy_demo", "kernel_bench", "matfree_scaling", "comm_tradeoff", "solver_frontier", "lm_workload", "async_frontier", "roofline_bench")
 
 
 def main() -> None:

@@ -643,6 +643,21 @@ _CLOCK_CALLS = {
     "time.perf_counter", "time.perf_counter_ns",
     "datetime.datetime.now", "datetime.datetime.utcnow",
 }
+
+# The ONE sanctioned wall-clock scope: repro.telemetry's host-side recorders
+# measure wall time by design — host spans are observations that never feed
+# back into a trajectory (docs/telemetry.md pins that contract). The
+# exemption is deliberately narrow: it lifts only *wall-clock* findings, and
+# only from name-heuristic step scopes in modules under these path
+# fragments. Scan bodies and ledger scopes stay covered even there (traced /
+# accounted code must stay deterministic no matter which package it lives
+# in), as do all entropy and RNG findings.
+_SANCTIONED_CLOCK_PATHS = ("repro/telemetry/",)
+
+
+def _sanctioned_clock_module(mod: Module) -> bool:
+    path = mod.path.replace(os.sep, "/")
+    return any(frag in path for frag in _SANCTIONED_CLOCK_PATHS)
 _ENTROPY_CALLS = {"os.urandom", "uuid.uuid1", "uuid.uuid4"}
 _HASH_ORDER_ITERS = {"set", "frozenset", "vars", "globals", "locals"}
 
@@ -671,12 +686,25 @@ def _nondet_call(mod: Module, node: ast.Call) -> Optional[str]:
 )
 def nondeterminism(mod: Module) -> Iterator[Finding]:
     scopes = traced_scopes(mod) + ledger_scopes(mod)
+    # Scopes where the telemetry carve-out does NOT apply: lax.scan bodies
+    # (compiled by the engine regardless of the function's name) and ledger
+    # accounting — only the name-heuristic step scopes are exemptable.
+    strict_ids = {id(fn) for fn in _scan_bodies(mod)}
+    strict_ids |= {id(s) for _, s in ledger_scopes(mod)}
+    sanctioned = _sanctioned_clock_module(mod)
     reported: Set[Tuple[int, int]] = set()
     for scope_name, scope in scopes:
         for node in _walk_scope(scope):
             key = (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
             if isinstance(node, ast.Call):
                 why = _nondet_call(mod, node)
+                if (
+                    why
+                    and sanctioned
+                    and why.startswith("wall-clock read")
+                    and id(scope) not in strict_ids
+                ):
+                    continue
                 if why and key not in reported:
                     reported.add(key)
                     yield mod.finding(

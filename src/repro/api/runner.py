@@ -117,6 +117,12 @@ class RunResult:
     # synchronous schedules.
     peak_state_bytes: Optional[int] = None
     n_dropped: Optional[int] = None
+    # Per-round solver internals recorded when the spec sets
+    # ``telemetry.diagnostics`` (``diag_``-prefixed metric fields, prefix
+    # stripped — see repro.telemetry.diagnostics). Empty when off.
+    diagnostics: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def final_loss(self) -> float:
@@ -202,6 +208,96 @@ def _running_sum(values: List[int]) -> List[int]:
     return out
 
 
+# Solvers whose step computes diagnostics natively (collective-aware, so
+# they are correct under shard_map too). Everything else gets the generic
+# state-delta wrapper, which is scan/host-only.
+_INSTEP_DIAG_SOLVERS = ("fednew", "q-fednew")
+
+
+def _telemetry_hooks(spec: ExperimentSpec):
+    """(recorder, tracer) from the spec's telemetry section. (None, None)
+    when ``trace_path`` is unset — the engine then keeps its historical
+    zero-overhead path (no telemetry import at all)."""
+    tspec = spec.telemetry
+    if not tspec.trace_path:
+        return None, None
+    from repro import telemetry
+
+    rec = telemetry.TraceRecorder()
+    if spec.name:
+        rec.other_data["run"] = spec.name
+    if tspec.tag:
+        rec.other_data["tag"] = tspec.tag
+    return rec, telemetry.EngineTracer(recorder=rec, profile=tspec.profile)
+
+
+def _finish_telemetry(spec: ExperimentSpec, rec, tracer) -> None:
+    """Attach roofline records (when profiling) and write the trace file."""
+    if rec is None:
+        return
+    if tracer is not None and tracer.wants_profile:
+        rec.other_data["roofline"] = tracer.roofline_records()
+    rec.save(spec.telemetry.trace_path)
+
+
+def _stream_result(spec: ExperimentSpec, metrics, diagnostics) -> None:
+    """One JSONL row per round: ``{"round": r, <metrics...>, <diag_...>}``."""
+    if not spec.telemetry.stream_path:
+        return
+    from repro import telemetry
+
+    rounds = len(next(iter(metrics.values()), []))
+    rows = []
+    for r in range(rounds):
+        row: Dict[str, Any] = {"round": r}
+        for name, vals in metrics.items():
+            row[name] = vals[r]
+        for name, vals in diagnostics.items():
+            # run-level diagnostics (events cache counters) are one-element
+            # series — they ride in RunResult, not in every row
+            if len(vals) == rounds:
+                row[telemetry.DIAG_PREFIX + name] = vals[r]
+        rows.append(row)
+    telemetry.stream_rows(spec.telemetry.stream_path, rows)
+
+
+# Per-client simulated bars are replayed for at most this many client ids
+# (matches repro.events.runtime._MAX_TRACED_CLIENTS — traces must not scale
+# with the fleet).
+_MAX_TRACED_CLIENTS = 256
+
+
+def _replay_netsim_trace(
+    rec, links, payloads, down_payloads, masks, round_s
+) -> None:
+    """Rebuild the synchronous netsim timeline as simulated-clock spans:
+    per-client download/upload bars (no compute model on this path) and a
+    ``server_step`` instant at each straggler barrier. Pure function of the
+    exact ledgers + the replayed masks, so the sub-trace is deterministic
+    per seed regardless of scan/shard_map/host execution."""
+    n = len(links.uplink_bps)
+    t = 0.0
+    for r, dt in enumerate(round_s):
+        active = (
+            range(min(n, _MAX_TRACED_CLIENTS)) if masks is None
+            else [c for c in np.nonzero(masks[r])[0]
+                  if c < _MAX_TRACED_CLIENTS]
+        )
+        for cid in active:
+            rec.client_segments(
+                int(cid),
+                t,
+                down_s=down_payloads[r] / float(links.downlink_bps[cid])
+                + float(links.latency_s[cid]),
+                compute_s=0.0,
+                up_s=payloads[r] / float(links.uplink_bps[cid])
+                + float(links.latency_s[cid]),
+                round=r,
+            )
+        t += dt
+        rec.sim_instant("server_step", t, round=r)
+
+
 def _run_events(spec: ExperimentSpec) -> RunResult:
     """The ``mode="events"`` runner: event-driven FedNew through
     ``repro.events.runtime.run_events``. Per-server-step series replace the
@@ -241,6 +337,7 @@ def _run_events(spec: ExperimentSpec) -> RunResult:
     else:
         trace = None
 
+    rec, tracer = _telemetry_hooks(spec)
     t0 = time.perf_counter()
     res = events_runtime.run_events(
         cfg, obj, data, fleet,
@@ -255,10 +352,23 @@ def _run_events(spec: ExperimentSpec) -> RunResult:
         cache_capacity=aspec.cache_capacity,
         checkpoint_dir=aspec.checkpoint_dir,
         eval_cohort=aspec.eval_cohort,
+        tracer=tracer,
     )
     wall = time.perf_counter() - t0
 
     metric_lists = dict(res.metrics)
+    diagnostics: Dict[str, List[float]] = {}
+    if spec.telemetry.diagnostics:
+        # Events-mode internals: the staleness series (async only — it IS
+        # already a per-step law there) plus the cohort-cache audit. The
+        # run-level cache/dropout counters become one-element series so the
+        # diagnostics container stays uniformly Dict[str, List[float]].
+        for k in ("staleness_mean", "staleness_max"):
+            if k in metric_lists:
+                diagnostics[k] = list(metric_lists[k])
+        diagnostics["cache_spills"] = [float(res.n_spills)]
+        diagnostics["cache_restores"] = [float(res.n_restores)]
+        diagnostics["dropped_dispatches"] = [float(res.n_dropped)]
     f_star = None
     if spec.telemetry.f_star_newton_iters > 0:
         from repro.core import baselines
@@ -289,7 +399,10 @@ def _run_events(spec: ExperimentSpec) -> RunResult:
         simulated_time_s=res.simulated_time_s,
         peak_state_bytes=res.peak_state_bytes,
         n_dropped=res.n_dropped,
+        diagnostics=diagnostics,
     )
+    _finish_telemetry(spec, rec, tracer)
+    _stream_result(spec, metric_lists, diagnostics)
     if spec.telemetry.save_path:
         result.save_json(spec.telemetry.save_path)
     return result
@@ -303,11 +416,31 @@ def run(spec: ExperimentSpec) -> RunResult:
         return _run_events(spec)
     obj, data = build.build_problem(spec)
     build.check_solver_objective(spec, obj)
-    solver = build.build_solver(spec.solver, spec.compression)
     mesh = build.build_mesh(spec.schedule, data.n_clients)
+    if spec.telemetry.diagnostics and spec.solver.name in _INSTEP_DIAG_SOLVERS:
+        merged = build._merged_solver_hparams(spec.solver, spec.compression)
+        merged["diagnostics"] = True
+        solver = engine.get_solver(spec.solver.name, **merged)
+    elif spec.telemetry.diagnostics:
+        if mesh is not None:
+            raise ValueError(
+                f"telemetry.diagnostics for solver {spec.solver.name!r} uses "
+                "the generic state-delta wrapper, whose norms would be "
+                "shard-local under a mesh; only "
+                f"{'/'.join(_INSTEP_DIAG_SOLVERS)} compute diagnostics "
+                "inside the step (collective-aware)"
+            )
+        from repro import telemetry
+
+        solver = telemetry.instrument(
+            build.build_solver(spec.solver, spec.compression)
+        )
+    else:
+        solver = build.build_solver(spec.solver, spec.compression)
     part = build.build_participation(spec)
     x0 = build.build_x0(spec)
     sched = spec.schedule
+    rec, tracer = _telemetry_hooks(spec)
 
     timings: List = []
     t0 = time.perf_counter()
@@ -320,6 +453,7 @@ def run(spec: ExperimentSpec) -> RunResult:
         mesh=mesh,
         participation=part,
         timings=timings,
+        tracer=tracer,
     )
     jax.block_until_ready(metrics)
     wall = time.perf_counter() - t0
@@ -336,6 +470,11 @@ def run(spec: ExperimentSpec) -> RunResult:
         name: [float(v) for v in np.asarray(vals)]
         for name, vals in zip(metrics._fields, metrics)
     }
+    diagnostics: Dict[str, List[float]] = {}
+    if spec.telemetry.diagnostics:
+        from repro import telemetry
+
+        metric_lists, diagnostics = telemetry.split_metric_lists(metric_lists)
 
     f_star = None
     if spec.telemetry.f_star_newton_iters > 0:
@@ -374,6 +513,10 @@ def run(spec: ExperimentSpec) -> RunResult:
         sim_round_s, sim_total_s = netsim.simulate_rounds(
             links, payloads, down_payloads, masks
         )
+        if rec is not None:
+            _replay_netsim_trace(
+                rec, links, payloads, down_payloads, masks, sim_round_s
+            )
 
     result = RunResult(
         spec=spec.to_dict(),
@@ -396,7 +539,10 @@ def run(spec: ExperimentSpec) -> RunResult:
         cumulative_downlink_bits_total=_running_sum(down_totals),
         simulated_round_s=sim_round_s,
         simulated_time_s=sim_total_s,
+        diagnostics=diagnostics,
     )
+    _finish_telemetry(spec, rec, tracer)
+    _stream_result(spec, metric_lists, diagnostics)
     if spec.telemetry.save_path:
         result.save_json(spec.telemetry.save_path)
     return result

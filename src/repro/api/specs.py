@@ -487,17 +487,39 @@ class TelemetrySpec:
     save_path            write the RunResult JSON here after the run
                          (the CLI's ``--out`` overrides it).
     tag                  free-form label carried into the result.
+    trace_path           write a Chrome-trace-event JSON (Perfetto-loadable)
+                         here: host-clock spans for init/dispatch/eval
+                         phases, simulated-clock per-client bars when the
+                         run has a network model or runs in events mode.
+    diagnostics          record per-round solver internals (ADMM residuals,
+                         CG iterations, codec error, ...) into
+                         ``RunResult.diagnostics``. Same trajectory, extra
+                         outputs (pinned in tests/test_telemetry.py).
+    stream_path          append one JSONL row per round (metrics +
+                         diagnostics) here as the run progresses.
+    profile              capture HLO cost analyses per dispatched kernel and
+                         attach achieved-vs-attainable roofline records to
+                         the trace (requires trace_path).
     """
 
     f_star_newton_iters: int = 0
     save_path: Optional[str] = None
     tag: str = ""
+    trace_path: Optional[str] = None
+    diagnostics: bool = False
+    stream_path: Optional[str] = None
+    profile: bool = False
 
     def __post_init__(self):
         if self.f_star_newton_iters < 0:
             raise ValueError(
                 "f_star_newton_iters must be >= 0, got "
                 f"{self.f_star_newton_iters}"
+            )
+        if self.profile and not self.trace_path:
+            raise ValueError(
+                "profile=true records roofline data into the trace; set "
+                "trace_path as well"
             )
 
 

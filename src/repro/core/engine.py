@@ -31,6 +31,7 @@ one-jitted-step-per-round loop bit for bit.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -276,6 +277,7 @@ def run(
     donate: bool = True,
     participation: Optional[participation_lib.Participation] = None,
     timings: Optional[List[Tuple[int, float]]] = None,
+    tracer=None,
 ):
     """Run ``rounds`` federated rounds; returns ``(final_state, metrics)``
     with every metric stacked to shape ``(rounds,)``.
@@ -298,6 +300,15 @@ def run(
                  cost with it (``repro.api`` reports ``compile_s`` vs
                  ``steady_wall_clock_s``). ``None`` (default) adds no
                  synchronization at all.
+    tracer=...   a duck-typed telemetry hook (``repro.telemetry.
+                 EngineTracer``): ``span(name, **args)`` context managers
+                 wrap the host phases (init, each dispatch), and — when its
+                 ``wants_profile`` flag is set — ``profile_dispatch(label,
+                 jitted, *args)`` is offered each distinct compiled callable
+                 BEFORE it first executes (AOT lowering only; the
+                 computation never runs, so profiling cannot perturb the
+                 trajectory). ``None`` (default) is the historical
+                 zero-overhead path.
     """
     if rounds <= 0:
         raise ValueError("rounds must be positive")
@@ -313,10 +324,11 @@ def run(
             solver, obj, data, rounds, mesh,
             key=key, x0=x0, block_size=block_size,
             axis_name=axis_name, donate=donate, participation=part,
-            timings=timings,
+            timings=timings, tracer=tracer,
         )
 
-    state = solver.init(obj, data, key, x0)
+    with _span(tracer, "init", solver=solver.name):
+        state = solver.init(obj, data, key, x0)
     if part is None:
         step1 = lambda s: solver.step(s, obj, data)
         carry = state
@@ -332,7 +344,7 @@ def run(
 
         carry = (state, part.init_key())
     if mode == "host":
-        carry, metrics = _host_loop(step1, carry, rounds, timings)
+        carry, metrics = _host_loop(step1, carry, rounds, timings, tracer)
     else:
         if donate:
             # init() may alias caller arrays (the PRNG key, x0); donating
@@ -340,27 +352,45 @@ def run(
             # caller.
             carry = jax.tree.map(jnp.copy, carry)
         carry, metrics = _scan_blocks(
-            step1, carry, rounds, block_size, donate, timings
+            step1, carry, rounds, block_size, donate, timings, tracer
         )
     return (carry[0] if part is not None else carry), metrics
 
 
-def _timed(call, n_rounds: int, timings):
+def _span(tracer, name: str, **args):
+    """The tracer's host span, or a no-op when telemetry is off."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, **args)
+
+
+def _profile(tracer, label: str, jitted, *args) -> None:
+    """Offer one compiled callable to the tracer's HLO cost capture (a
+    pre-execution AOT lowering; dedup'd by label inside the tracer)."""
+    if tracer is not None and getattr(tracer, "wants_profile", False):
+        tracer.profile_dispatch(label, jitted, *args)
+
+
+def _timed(call, n_rounds: int, timings, tracer=None, label="step"):
     """Run one dispatched jit call, optionally timing it to completion."""
-    if timings is None:
+    if timings is None and tracer is None:
         return call()
     t0 = time.perf_counter()
-    out = jax.block_until_ready(call())
-    timings.append((n_rounds, time.perf_counter() - t0))
+    with _span(tracer, "dispatch", label=label, rounds=n_rounds):
+        out = jax.block_until_ready(call())
+    if timings is not None:
+        timings.append((n_rounds, time.perf_counter() - t0))
     return out
 
 
-def _host_loop(step1, state, rounds: int, timings=None):
+def _host_loop(step1, state, rounds: int, timings=None, tracer=None):
     """The historical driver, verbatim: jit one step, iterate on the host."""
     jstep = jax.jit(step1)
+    _profile(tracer, "host_step", jstep, state)
     history = []
     for _ in range(rounds):
-        state, m = _timed(lambda: jstep(state), 1, timings)
+        state, m = _timed(lambda: jstep(state), 1, timings, tracer,
+                          "host_step")
         history.append(m)
     return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)
 
@@ -380,7 +410,7 @@ def _concat_metrics(chunks):
 
 
 def _scan_blocks(step1, state, rounds: int, block_size, donate: bool,
-                 timings=None):
+                 timings=None, tracer=None):
     def block(s, length):
         return jax.lax.scan(lambda c, _: step1(c), s, None, length=length)
 
@@ -389,7 +419,9 @@ def _scan_blocks(step1, state, rounds: int, block_size, donate: bool,
     )
     chunks = []
     for n in _block_plan(rounds, block_size):
-        state, m = _timed(lambda: jblock(state, n), n, timings)
+        label = f"scan_block[{n}r]"
+        _profile(tracer, label, jblock, state, n)
+        state, m = _timed(lambda: jblock(state, n), n, timings, tracer, label)
         chunks.append(m)
     return state, _concat_metrics(chunks)
 
@@ -413,6 +445,7 @@ def _run_sharded(
     donate: bool,
     participation: Optional[participation_lib.Participation] = None,
     timings=None,
+    tracer=None,
 ):
     axis = axis_name or mesh.axis_names[0]
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -427,7 +460,8 @@ def _run_sharded(
 
     # Round-0 state is built on the full dataset on the default device, then
     # laid out: per-client rows split over the client axis, rest replicated.
-    state = solver.init(obj, data, key, x0)
+    with _span(tracer, "init", solver=solver.name):
+        state = solver.init(obj, data, key, x0)
     if donate:
         state = jax.tree.map(jnp.copy, state)  # don't donate caller aliases
     state_specs = sh.fed_state_specs(state, solver.client_fields, axis)
@@ -474,9 +508,10 @@ def _run_sharded(
 
     chunks = []
     for length in _block_plan(rounds, block_size):
-        carry, m = _timed(
-            lambda: jitted(length)(carry, data), length, timings
-        )
+        jfn = jitted(length)
+        label = f"shard_block[{length}r]"
+        _profile(tracer, label, jfn, carry, data)
+        carry, m = _timed(lambda: jfn(carry, data), length, timings, tracer, label)
         chunks.append(m)
     final = carry[0] if part is not None else carry
     return final, _concat_metrics(chunks)

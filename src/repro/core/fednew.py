@@ -100,6 +100,12 @@ class FedNewConfig:
     cg_iters: int = 32  # matfree: CG iterations for the eq. 9 solve
     cg_tol: float = 0.0  # matfree: per-client residual-norm early exit (0 = off)
     codec: Union[None, str, Mapping[str, Any]] = None  # repro.comm codec spec
+    # Static trace-time flag: True extends the step's metrics with the
+    # ``diag_*`` catalogue (ADMM residuals, CG iterations-to-tolerance,
+    # codec error, anchor staleness — see docs/telemetry.md), computed
+    # read-only from in-step intermediates. False (default) is the
+    # byte-identical historical lowering.
+    diagnostics: bool = False
 
     def __post_init__(self):
         for b in (self.backend, self.solve_backend, self.quant_backend):
@@ -199,6 +205,123 @@ class StepMetrics(NamedTuple):
     direction_norm: jax.Array
 
 
+class StepMetricsDiag(NamedTuple):
+    """StepMetrics + the per-round diagnostics catalogue (the ``diag_``
+    prefix is the ``repro.telemetry`` split convention: the runner peels
+    these into ``RunResult.diagnostics``). Returned only under
+    ``FedNewConfig(diagnostics=True)``; every extra is a pure read of
+    in-step intermediates — no PRNG use, no state change — aggregated over
+    the sampled clients (collectives over ``axis_name`` when sharded).
+
+    admm_primal_residual  mean_i ||y_i_tx - ȳ|| — eq. 11's consensus gap
+                          on the transmitted directions
+    admm_dual_residual    rho * ||ȳ^k - ȳ^{k-1}|| — the dual residual of
+                          the one-pass ADMM step
+    cg_iters              matfree: mean iterations-to-tolerance of the
+                          eq. 9 CG solve (== cg_iters when tol never trips);
+                          0 on the dense paths
+    cg_residual           matfree: mean final per-client CG residual norm;
+                          0 on the dense paths
+    codec_error           mean_i ||decode(encode(y_i)) - y_i|| / ||y_i||
+                          (exact compression error of the uplink codec)
+    anchor_staleness      matfree: mean_i ||anchor_i - x^k|| (drift of the
+                          cached curvature anchors); dense: rounds since
+                          this round's Hessian refresh
+    """
+
+    loss: jax.Array
+    grad_norm: jax.Array
+    uplink_bits_per_client: jax.Array
+    dual_sum_residual: jax.Array
+    direction_norm: jax.Array
+    diag_admm_primal_residual: jax.Array
+    diag_admm_dual_residual: jax.Array
+    diag_cg_iters: jax.Array
+    diag_cg_residual: jax.Array
+    diag_codec_error: jax.Array
+    diag_anchor_staleness: jax.Array
+
+
+def _diag_mean(values, mask, axis_name):
+    """Mean of a per-client (n_local,) series over the sampled clients,
+    replicated across the client mesh axis when sharded."""
+    w = jnp.ones_like(values) if mask is None else mask.astype(values.dtype)
+    total = jnp.sum(values * w)
+    count = jnp.sum(w)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+        count = jax.lax.psum(count, axis_name)
+    return total / jnp.maximum(count, 1.0)
+
+
+def _anchor_staleness(state, curv, cfg: FedNewConfig, mask, axis_name):
+    """Hessian-anchor staleness: matfree measures the anchors' actual drift
+    from the current iterate; dense reports rounds since the refresh that
+    produced this round's factors (a host-free re-derivation of the
+    ``step % hessian_period`` schedule)."""
+    if cfg.matfree:
+        bcast = jax.tree.map(
+            lambda xl, cl: cl - jnp.broadcast_to(xl, cl.shape), state.x, curv
+        )
+        return _diag_mean(hvp.client_norms(bcast), mask, axis_name)
+    age = (
+        state.step % cfg.hessian_period
+        if cfg.hessian_period > 0 else state.step
+    )
+    return age.astype(jnp.float32)
+
+
+def _diag_metrics(
+    state: FedNewState,
+    cfg: FedNewConfig,
+    base: StepMetrics,
+    *,
+    y_i,
+    y_i_tx,
+    y,
+    curv,
+    cg_info,
+    mask,
+    axis_name,
+) -> StepMetricsDiag:
+    """The ``diag_*`` catalogue from one round's intermediates — shared by
+    the flat and pytree step paths (every expression is tree-generic: a flat
+    ``(n, d)`` stack is just a one-leaf tree)."""
+    primal = _diag_mean(
+        hvp.client_norms(jax.tree.map(
+            lambda t, yl: t - jnp.broadcast_to(yl, t.shape), y_i_tx, y
+        )),
+        mask, axis_name,
+    )
+    dual = cfg.rho * hvp.tree_norm(
+        jax.tree.map(lambda a, b: a - b, y, state.y)
+    )
+    codec_err = _diag_mean(
+        hvp.client_norms(jax.tree.map(lambda a, b: a - b, y_i_tx, y_i))
+        / jnp.maximum(hvp.client_norms(y_i), 1e-30),
+        mask, axis_name,
+    )
+    if cg_info is not None:
+        cg_iters = _diag_mean(
+            cg_info.iterations.astype(jnp.float32), mask, axis_name
+        )
+        cg_residual = _diag_mean(cg_info.residual_norm, mask, axis_name)
+    else:
+        cg_iters = jnp.zeros((), jnp.float32)
+        cg_residual = jnp.zeros((), jnp.float32)
+    return StepMetricsDiag(
+        *base,
+        diag_admm_primal_residual=primal,
+        diag_admm_dual_residual=dual,
+        diag_cg_iters=cg_iters,
+        diag_cg_residual=cg_residual,
+        diag_codec_error=codec_err,
+        diag_anchor_staleness=_anchor_staleness(
+            state, curv, cfg, mask, axis_name
+        ),
+    )
+
+
 def _factorize(obj: Objective, x, data, cfg: FedNewConfig):
     H = obj.local_hessian(x, data)  # (n, d, d)
     if cfg.solve_uses_kernel:
@@ -282,24 +405,34 @@ def init(
     )
 
 
-def _local_solve(curv, rhs, cfg: FedNewConfig, obj=None, data=None):
-    """(H_i + (alpha+rho) I)^{-1} rhs, batched over clients (eq. 9)."""
+def _local_solve(curv, rhs, cfg: FedNewConfig, obj=None, data=None,
+                 with_info=False):
+    """(H_i + (alpha+rho) I)^{-1} rhs, batched over clients (eq. 9).
+
+    ``with_info=True`` (diagnostics) returns ``(y_i, CGResult-or-None)``
+    instead of ``y_i`` — the CG result carries per-client
+    iterations-to-tolerance and final residuals on the matfree path, None
+    on the direct solves (their residual is solver-exact)."""
     if cfg.matfree:
         # `curv` holds per-client anchor points; each CG matvec is one call
         # to the batched closed-form HVP — H_i never exists as a matrix.
-        return hvp.cg_solve_clients(
+        res = hvp.cg_solve_clients(
             lambda v: obj.local_hvp(curv, data, v),
             rhs,
             damping=cfg.damping,
             iters=cfg.cg_iters,
             tol=cfg.cg_tol,
-        ).x
+            track_iters=with_info,
+        )
+        return (res.x, res) if with_info else res.x
     if cfg.solve_uses_kernel:
         # `curv` holds the raw Hessians on this path (see _factorize)
-        return dispatch.client_solve(
+        y = dispatch.client_solve(
             curv, rhs, damping=cfg.damping, backend=cfg.resolved_solve_backend
         )
-    return jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(curv, rhs)
+    else:
+        y = jax.vmap(lambda L, r: jsl.cho_solve((L, True), r))(curv, rhs)
+    return (y, None) if with_info else y
 
 
 def _mask_rows(mask, new, old):
@@ -349,13 +482,15 @@ def _step_tree(
     rhs = admm.admm_rhs(
         g_i, state.lam, admm.bcast_clients(state.y, n_local), cfg.rho
     )
-    y_i = hvp.cg_solve_clients(
+    cg_res = hvp.cg_solve_clients(
         lambda v: obj.local_hvp(curv, data, v),
         rhs,
         damping=cfg.damping,
         iters=cfg.cg_iters,
         tol=cfg.cg_tol,
-    ).x
+        track_iters=cfg.diagnostics,
+    )
+    y_i = cg_res.x
 
     # -- uplink compression: the codec applied leaf-wise --------------------
     codec = cfg.build_codec()
@@ -396,6 +531,11 @@ def _step_tree(
         dual_sum_residual=admm.dual_sum_residual(lam),
         direction_norm=hvp.tree_norm(y),
     )
+    if cfg.diagnostics:
+        metrics = _diag_metrics(
+            state, cfg, metrics, y_i=y_i, y_i_tx=y_i_tx, y=y, curv=curv,
+            cg_info=cg_res, mask=mask, axis_name=None,
+        )
     return new_state, metrics
 
 
@@ -464,7 +604,10 @@ def step(
     rhs = admm.admm_rhs(
         g_i, state.lam, jnp.broadcast_to(state.y, g_i.shape), cfg.rho
     )
-    y_i = _local_solve(curv, rhs, cfg, obj, data)
+    if cfg.diagnostics:
+        y_i, cg_info = _local_solve(curv, rhs, cfg, obj, data, with_info=True)
+    else:
+        y_i = _local_solve(curv, rhs, cfg, obj, data)
 
     # -- uplink compression (repro.comm codec) ------------------------------
     # Encode client-side, aggregate the PS-side decode: eq. 13 and the dual
@@ -515,6 +658,11 @@ def step(
         dual_sum_residual=admm.dual_sum_residual(lam, axis_name),
         direction_norm=jnp.linalg.norm(y),
     )
+    if cfg.diagnostics:
+        metrics = _diag_metrics(
+            state, cfg, metrics, y_i=y_i, y_i_tx=y_i_tx, y=y, curv=curv,
+            cg_info=cg_info, mask=mask, axis_name=axis_name,
+        )
     return new_state, metrics
 
 

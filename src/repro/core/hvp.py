@@ -171,12 +171,21 @@ def _client_axpy(alpha, x, y):
     return jax.tree.map(one, x, y)
 
 
+def client_norms(tree) -> jax.Array:
+    """Per-client l2 norms over a client-stacked tree: ``sqrt`` of the
+    per-client self inner products — shape (n,). Works on a flat ``(n, d)``
+    array and on per-leaf ``(n, ...)`` param trees alike (the diagnostics
+    helper FedNew's ``diag_*`` metrics are built from)."""
+    return jnp.sqrt(_client_dot(tree, tree))
+
+
 def cg_solve_clients(
     matvec: Callable,
     rhs,
     damping: float,
     iters: int = 32,
     tol: float = 0.0,
+    track_iters: bool = False,
 ) -> CGResult:
     """Solve n independent damped systems (H_i + damping I) x_i = rhs_i with
     one batched CG: every leaf of ``rhs`` carries a leading client axis and
@@ -187,7 +196,14 @@ def cg_solve_clients(
 
     ``tol=0`` always runs ``iters`` iterations; a positive tol freezes a
     client's iterates once its residual norm drops below it (static cost,
-    jit-friendly — mirrors ``cg_solve``)."""
+    jit-friendly — mirrors ``cg_solve``).
+
+    ``track_iters=True`` (a static, trace-time flag) additionally carries a
+    per-client live-iteration count, so ``CGResult.iterations`` comes back
+    as the (n,) iterations-to-tolerance instead of the static ``iters``
+    constant. Off — the default — the carry, the loop body, and therefore
+    the lowering are exactly the historical ones (the bit-exactness pins
+    ride on that)."""
 
     def damped_mv(p):
         return tree_axpy(damping, p, matvec(p))
@@ -198,7 +214,7 @@ def cg_solve_clients(
     rs = _client_dot(r, r)  # (n,)
 
     def body(_, carry):
-        x, r, p, rs = carry
+        x, r, p, rs = carry[:4]
         ap = damped_mv(p)
         denom = _client_dot(p, ap)
         live = rs > tol * tol
@@ -209,10 +225,17 @@ def cg_solve_clients(
         rs_new = _client_dot(r, r)
         beta = jnp.where(live, rs_new / jnp.maximum(rs, 1e-30), 0.0)
         p = _client_axpy(beta, p, r)
+        if track_iters:
+            return x, r, p, rs_new, carry[4] + live.astype(jnp.int32)
         return x, r, p, rs_new
 
-    x, r, p, rs = jax.lax.fori_loop(0, iters, body, (x, r, p, rs))
-    return CGResult(x=x, residual_norm=jnp.sqrt(rs), iterations=jnp.asarray(iters))
+    init = (x, r, p, rs)
+    if track_iters:
+        init = init + (jnp.zeros_like(rs, dtype=jnp.int32),)
+    out = jax.lax.fori_loop(0, iters, body, init)
+    x, rs = out[0], out[3]
+    iterations = out[4] if track_iters else jnp.asarray(iters)
+    return CGResult(x=x, residual_norm=jnp.sqrt(rs), iterations=iterations)
 
 
 def make_damped_solver(loss_fn: Callable, damping: float, iters: int = 8):

@@ -32,6 +32,7 @@ acceptance test.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence
@@ -235,6 +236,45 @@ class EventsResult:
     peak_state_bytes: int
     n_dropped: int = 0
     n_spills: int = 0
+    n_restores: int = 0
+
+
+# Per-client simulated-clock trace bars are emitted only for the first
+# this-many client ids: a fleet-sized trace would defeat the O(sampled)
+# memory contract the events executor exists for.
+_MAX_TRACED_CLIENTS = 256
+
+
+def _span(tracer, name: str, **args):
+    """Duck-typed host span (see ``engine._span``): telemetry stays an
+    optional import-free hook here too."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, **args)
+
+
+def _recorder(tracer):
+    return getattr(tracer, "recorder", None) if tracer is not None else None
+
+
+def _client_bar(rec, fleet: sim.ClientFleet, cid: int, t0_s: float,
+                up_msg: int, down_msg: int, **args) -> None:
+    """download/compute/upload bars for one service interval, placed on the
+    simulated clock. Latency rides inside the transfer segments, so the bar
+    ends exactly at ``t0_s + sim.service_time_s(...)``."""
+    if rec is None or cid >= _MAX_TRACED_CLIENTS:
+        return
+    links = fleet.links
+    rec.client_segments(
+        int(cid),
+        t0_s,
+        down_s=down_msg / float(links.downlink_bps[cid])
+        + float(links.latency_s[cid]),
+        compute_s=float(fleet.compute_s[cid]),
+        up_s=up_msg / float(links.uplink_bps[cid])
+        + float(links.latency_s[cid]),
+        **args,
+    )
 
 
 def _eval_ids(n: int, eval_cohort: int) -> np.ndarray:
@@ -266,16 +306,19 @@ def _barrier_run(
     cache: CohortCache,
     ledger,
     eval_cohort: int,
+    tracer=None,
 ) -> EventsResult:
     fcfg = cfg.fednew_config()
     n = source.n_clients
     solver = fednew.solver(fcfg)
+    rec = _recorder(tracer)
 
     # Round 0 state comes from fednew.init on the first cohort — the same
     # builder the engine uses, so x0/dtype/codec-width defaults can't drift.
     ids0 = np.arange(cohort, dtype=np.int64) % n
     data0 = source.materialize(ids0)
-    state = solver.init(obj, data0, key, x0)
+    with _span(tracer, "init", schedule="barrier"):
+        state = solver.init(obj, data0, key, x0)
     word = word_bits(state.x)
     curv_shape = np.asarray(state.curv).shape
     curv_dtype = np.asarray(state.curv).dtype
@@ -316,7 +359,8 @@ def _barrier_run(
             key=k,
             step=jnp.asarray(r, jnp.int32),
         )
-        st2, m = run_step(st, data)
+        with _span(tracer, "dispatch", label="barrier_step", rounds=1):
+            st2, m = run_step(st, data)
         x, y, k = st2.x, st2.y, st2.key
         cache.scatter(ids, np.asarray(st2.lam), np.asarray(st2.comm), r)
         history.append(jax.tree.map(np.asarray, m))
@@ -326,6 +370,11 @@ def _barrier_run(
         mask = np.zeros(n, dtype=np.float64)
         mask[ids] = 1.0
         dt = _barrier_time(fleet, mask, up_msg, down_msg)
+        if rec is not None:
+            for cid in ids:
+                _client_bar(rec, fleet, int(cid), t_total, up_msg, down_msg,
+                            round=r)
+            rec.sim_instant("server_step", t_total + dt, round=r)
         t_total += dt
         round_time_s.append(dt)
         up_totals.append(up_msg * len(ids))
@@ -354,6 +403,7 @@ def _barrier_run(
         simulated_time_s=t_total,
         peak_state_bytes=peak,
         n_spills=cache.n_spills,
+        n_restores=cache.n_restores,
     )
 
 
@@ -397,18 +447,21 @@ def _async_run(
     trace: Optional[arrivals_lib.ArrivalTrace],
     dropout_prob: float,
     seed: int,
+    tracer=None,
 ) -> EventsResult:
     fcfg = cfg.fednew_config()
     K = cfg.buffer_size
     n = source.n_clients
     codec = fcfg.build_codec()
+    rec = _recorder(tracer)
 
     # Iterate bookkeeping. Versions are server steps; per-version (x, y)
     # pairs are kept only while some in-flight or buffered client references
     # them — the history is bounded by inflight + K, never by steps.
     ids_probe = np.arange(1, dtype=np.int64)
     data_probe = source.materialize(ids_probe)
-    probe_state = fednew.init(obj, data_probe, fcfg, key, x0)
+    with _span(tracer, "init", schedule="async"):
+        probe_state = fednew.init(obj, data_probe, fcfg, key, x0)
     x = np.asarray(probe_state.x)
     dtype = x.dtype
     word = word_bits(probe_state.x)
@@ -466,6 +519,9 @@ def _async_run(
         if not ok:
             busy.discard(cid)
             _release(version)
+        elif rec is not None:
+            _client_bar(rec, fleet, cid, esim.now_s, up_msg, down_msg,
+                        version=version)
 
     if closed_loop:
         for _ in range(min(cohort, n)):
@@ -514,11 +570,12 @@ def _async_run(
             keys = comm.client_keys(sub, K, None, None)
         else:
             keys = jnp.zeros((K, 2), jnp.uint32)  # unused placeholder
-        new_x, y_bar, new_lam, new_comm = _flush_fn(
-            jnp.asarray(x), jnp.asarray(lam_rows), jnp.asarray(comm_rows),
-            jnp.asarray(x_rows), jnp.asarray(y_rows), jnp.asarray(stale),
-            keys, data, jnp.asarray(version, jnp.int32),
-        )
+        with _span(tracer, "dispatch", label="async_flush", rounds=1):
+            new_x, y_bar, new_lam, new_comm = _flush_fn(
+                jnp.asarray(x), jnp.asarray(lam_rows), jnp.asarray(comm_rows),
+                jnp.asarray(x_rows), jnp.asarray(y_rows), jnp.asarray(stale),
+                keys, data, jnp.asarray(version, jnp.int32),
+            )
         cache.scatter(ids, np.asarray(new_lam), np.asarray(new_comm), version)
         for _, v in buffer:
             _release(int(v))
@@ -533,8 +590,16 @@ def _async_run(
             del refcount[v]
             del hist[v]
 
+        if rec is not None:
+            rec.sim_instant(
+                "server_step", t, version=version,
+                staleness_mean=float(stale.mean()),
+                staleness_max=float(stale.max()),
+            )
+        with _span(tracer, "eval", version=version):
+            loss_now = float(eval_loss(jnp.asarray(x)))
         history_rows.append({
-            "loss": float(eval_loss(jnp.asarray(x))),
+            "loss": loss_now,
             "direction_norm": float(np.linalg.norm(y)),
             "staleness_mean": float(stale.mean()),
             "staleness_max": float(stale.max()),
@@ -568,6 +633,7 @@ def _async_run(
         peak_state_bytes=peak,
         n_dropped=esim.n_dropped,
         n_spills=cache.n_spills,
+        n_restores=cache.n_restores,
     )
 
 
@@ -592,6 +658,7 @@ def run_events(
     cache_capacity: int = 4096,
     checkpoint_dir: Optional[str] = None,
     eval_cohort: int = 64,
+    tracer=None,
 ) -> EventsResult:
     """Run ``server_steps`` server steps of event-driven FedNew.
 
@@ -645,9 +712,10 @@ def run_events(
             )
         return _barrier_run(
             cfg, obj, source, fleet, server_steps, cohort, key, x0, cache,
-            ledger, eval_cohort,
+            ledger, eval_cohort, tracer=tracer,
         )
     return _async_run(
         cfg, obj, source, fleet, server_steps, cohort, key, x0, cache,
         ledger, eval_cohort, arrival_trace, dropout_prob, seed,
+        tracer=tracer,
     )

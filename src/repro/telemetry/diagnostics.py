@@ -1,0 +1,104 @@
+"""Per-round solver diagnostics: the ``diag_`` metric convention.
+
+A solver step that computes diagnostics returns them as extra fields of its
+metrics NamedTuple, each named ``diag_<name>``. They ride the existing
+engine plumbing (scanned, stacked, concatenated — no second output path),
+and :func:`split_metric_lists` peels them off in the runner so
+``RunResult.metrics`` keeps its historical keys and
+``RunResult.diagnostics`` carries the catalogue (prefix stripped).
+
+Two sources produce ``diag_`` fields:
+
+  * **in-step diagnostics** — solvers that expose internals the generic
+    wrapper cannot see (FedNew's ADMM residuals, CG iteration counts, codec
+    error) compute them inside the traced step behind a static config flag
+    (``FedNewConfig(diagnostics=True)``); the flag off reproduces today's
+    lowering byte for byte.
+
+  * **:func:`instrument`** — a solver-agnostic wrapper deriving state-delta
+    diagnostics from ``(state_before, state_after)`` for every registry
+    solver. Pure tree arithmetic on the traced values: no PRNG use, no
+    state change, so the wrapped trajectory is bit-identical to the bare
+    one (pinned per conformance case in tests/test_telemetry.py).
+
+The wrapper runs on the scan/host schedules. Under ``shard_map`` the
+per-client state rows are shard-local and plain norms would silently go
+per-shard; the sharded path therefore uses in-step diagnostics only (which
+aggregate with collectives over ``axis_name``).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DIAG_PREFIX = "diag_"
+
+
+def split_metric_lists(
+    metric_lists: Dict[str, List[float]],
+) -> Tuple[Dict[str, List[float]], Dict[str, List[float]]]:
+    """(metrics, diagnostics): ``diag_``-prefixed keys move to the second
+    dict with the prefix stripped."""
+    metrics, diagnostics = {}, {}
+    for name, vals in metric_lists.items():
+        if name.startswith(DIAG_PREFIX):
+            diagnostics[name[len(DIAG_PREFIX):]] = vals
+        else:
+            metrics[name] = vals
+    return metrics, diagnostics
+
+
+@functools.lru_cache(maxsize=None)
+def _metrics_type(name: str, fields: Tuple[str, ...]):
+    """One namedtuple class per field layout — reused across rounds so the
+    scanned metrics stay a single pytree type."""
+    return collections.namedtuple(name, fields)
+
+
+def _float_leaves(tree):
+    return [
+        leaf for leaf in jax.tree.leaves(tree)
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)
+    ]
+
+
+def generic_extras(state_before, state_after) -> Dict[str, jax.Array]:
+    """State-delta diagnostics any solver supports: the l2 norm of the
+    float-state update and of the new float state (int/PRNG leaves — step
+    counters, keys — are excluded; they are bookkeeping, not math)."""
+    acc = jnp.float32
+    before = _float_leaves(state_before)
+    after = _float_leaves(state_after)
+    delta_sq = sum(
+        jnp.sum((jnp.asarray(b, acc) - jnp.asarray(a, acc)) ** 2)
+        for b, a in zip(after, before)
+    )
+    state_sq = sum(jnp.sum(jnp.asarray(a, acc) ** 2) for a in after)
+    return {
+        "diag_state_update_norm": jnp.sqrt(delta_sq),
+        "diag_state_norm": jnp.sqrt(state_sq),
+    }
+
+
+def instrument(solver, extras_fn=generic_extras):
+    """Wrap a ``FederatedSolver`` so its metrics carry ``diag_`` fields
+    computed from (state before, state after). The wrapped step is the
+    original step plus read-only arithmetic — same state math, same PRNG
+    stream, same uplink ledger."""
+
+    base_step = solver.step
+
+    def step(state, obj, data, **kw):
+        new_state, m = base_step(state, obj, data, **kw)
+        extras = extras_fn(state, new_state)
+        names = tuple(m._fields) + tuple(sorted(extras))
+        cls = _metrics_type(type(m).__name__ + "Diag", names)
+        return new_state, cls(*m, *(extras[k] for k in sorted(extras)))
+
+    return dataclasses.replace(solver, step=step)

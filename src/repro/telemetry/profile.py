@@ -1,0 +1,70 @@
+"""Roofline-backed profiling: achieved vs attainable per dispatched kernel.
+
+Bridges the static HLO cost model (``repro.roofline.hlo_cost`` — exact
+FLOP/byte counts off the post-SPMD optimized HLO) and measured wall-clock:
+
+    achieved    = analyzed FLOPs (bytes) / measured seconds
+    attainable  = min(PEAK_FLOPS_BF16, HBM_BW * arithmetic_intensity)
+
+The attainable side uses the TPU v5e constants from ``roofline.model`` — it
+is a *model* ceiling, reported alongside achieved so CPU runs read as the
+tiny fractions they are instead of silently re-scaling the roof. ``bound``
+names the binding resource of the model at this intensity ("compute" above
+the ridge point, "memory" below).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.roofline import hlo_cost
+from repro.roofline.model import HBM_BW, PEAK_FLOPS_BF16
+
+
+def analyze_jitted(jitted, *args, **kwargs) -> Dict[str, Any]:
+    """HLO cost of one jitted callable at these (abstract) args: AOT lower,
+    compile, analyze — the computation itself never runs."""
+    return hlo_cost.analyze(jitted.lower(*args, **kwargs).compile().as_text())
+
+
+def attainable_flops_per_s(cost: Dict[str, Any]) -> float:
+    """The roofline ceiling at this kernel's arithmetic intensity."""
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes", 0.0))
+    if nbytes <= 0.0:
+        return PEAK_FLOPS_BF16
+    return min(PEAK_FLOPS_BF16, HBM_BW * (flops / nbytes))
+
+
+def roofline_record(
+    label: str, cost: Dict[str, Any], seconds: Optional[float],
+    calls: int = 1,
+) -> Dict[str, Any]:
+    """One achieved-vs-attainable row. ``seconds`` is the measured duration
+    of ``calls`` executions (None when only the static cost is known — the
+    achieved fields are then null, never fabricated)."""
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes", 0.0))
+    attainable = attainable_flops_per_s(cost)
+    rec: Dict[str, Any] = {
+        "label": label,
+        "flops": flops,
+        "bytes": nbytes,
+        "collective_bytes": float(cost.get("collective_bytes", 0.0)),
+        "arithmetic_intensity": flops / nbytes if nbytes > 0 else None,
+        "attainable_flops_per_s": attainable,
+        "bound": "compute" if attainable >= PEAK_FLOPS_BF16 else "memory",
+        "unknown_loops": int(cost.get("unknown_loops", 0)),
+    }
+    if seconds is not None and seconds > 0.0:
+        per_call = seconds / max(1, calls)
+        rec["seconds_per_call"] = per_call
+        rec["achieved_flops_per_s"] = flops / per_call
+        rec["achieved_bytes_per_s"] = nbytes / per_call
+        rec["achieved_fraction"] = (flops / per_call) / attainable
+    else:
+        rec["seconds_per_call"] = None
+        rec["achieved_flops_per_s"] = None
+        rec["achieved_bytes_per_s"] = None
+        rec["achieved_fraction"] = None
+    return rec

@@ -1,0 +1,21 @@
+"""Bad twin: the telemetry carve-out is wall-clock-only and step-scope-only.
+Everything here must STILL be flagged even under a ``repro/telemetry/``
+path — a scan body is engine-compiled code whatever package it sits in, and
+RNG/entropy reads are never sanctioned."""
+
+import random
+import time
+
+import jax
+
+
+def step(state):
+    # stdlib RNG in a step scope: the carve-out does not cover entropy
+    jitter = random.random()
+
+    def body(carry, _):
+        # wall-clock read inside a lax.scan body: strict scope, still flagged
+        return carry + time.time(), None
+
+    out, _ = jax.lax.scan(body, state + jitter, None, length=3)
+    return out

@@ -1,0 +1,19 @@
+"""Good twin: a host-side telemetry recorder living under a
+``repro/telemetry/`` path. Its step-named method reads the wall clock —
+exactly what the sanctioned-scope carve-out exists for (host spans are
+observations, never trajectory inputs) — so ``nondeterminism`` must stay
+silent here while the identical source OUTSIDE a telemetry path is flagged
+(the control in tests/test_analysis.py)."""
+
+import time
+
+
+class Recorder:
+    def __init__(self):
+        self.spans = []
+
+    def record_step(self, name):
+        # wall-clock read in a name-heuristic step scope: sanctioned here
+        t0 = time.perf_counter()
+        self.spans.append((name, t0))
+        return t0

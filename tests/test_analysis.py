@@ -169,6 +169,44 @@ def test_factory_functions_are_not_traced_scopes():
 
 
 # ---------------------------------------------------------------------------
+# the sanctioned telemetry clock scope (docs/analysis.md `nondeterminism`)
+# ---------------------------------------------------------------------------
+
+_TELEMETRY_FIXTURES = FIXTURES / "telemetry_scope" / "repro" / "telemetry"
+
+
+def test_telemetry_scope_good_twin_clean():
+    # wall-clock read in a step-named recorder method under repro/telemetry/
+    report = analyze_paths([str(_TELEMETRY_FIXTURES / "good.py")])
+    assert report.clean, report.render_human()
+
+
+def test_telemetry_scope_same_source_flagged_outside_telemetry():
+    # the identical source under any other path keeps the finding — the
+    # exemption is path-scoped, not content-scoped
+    src = (_TELEMETRY_FIXTURES / "good.py").read_text()
+    report = analyze_source(src, path="repro/core/recorder.py")
+    assert "nondeterminism" in _rules_hit(report), report.render_human()
+
+
+def test_telemetry_scope_bad_twin_still_fires():
+    # even under repro/telemetry/: scan bodies and RNG stay covered
+    report = analyze_paths([str(_TELEMETRY_FIXTURES / "bad.py")])
+    messages = [f.message for f in report.findings]
+    assert "nondeterminism" in _rules_hit(report), report.render_human()
+    assert any("stdlib RNG" in m for m in messages)
+    assert any("wall-clock read" in m for m in messages)
+
+
+def test_telemetry_package_itself_lints_clean():
+    pkg = REPO / "src" / "repro" / "telemetry"
+    paths = sorted(str(p) for p in pkg.glob("*.py"))
+    assert paths
+    report = analyze_paths(paths)
+    assert report.clean, report.render_human()
+
+
+# ---------------------------------------------------------------------------
 # pragma suppression
 # ---------------------------------------------------------------------------
 
